@@ -1,0 +1,58 @@
+"""Shared benchmark fixtures: a trained tiny LM + synthetic corpus, cached on
+disk so every paper-table benchmark reuses the same float baseline."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import TINY
+from repro.checkpoint.store import load_tree, save_tree
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import heldout_split, make_corpus, make_eval_sets
+from repro.models.transformer import init_lm
+from repro.optim.schedules import warmup_cosine
+from repro.train.train_step import init_opt_state, make_train_step
+
+CACHE = os.environ.get("REPRO_CACHE", "/root/repo/.cache")
+TRAIN_STEPS = int(os.environ.get("REPRO_TINY_STEPS", "700"))
+
+
+def get_corpus():
+    corpus, meta = make_corpus(TINY.vocab_size, 200_000, seed=0)
+    train_toks, held = heldout_split(corpus)
+    evals = make_eval_sets(meta)
+    return corpus, meta, train_toks, held, evals
+
+
+def get_trained_tiny(verbose: bool = True):
+    """Returns (cfg, params, corpus bundle). Trains + caches on first call."""
+    cfg = TINY
+    bundle = get_corpus()
+    tag = f"{cfg.d_model}x{cfg.n_repeats}_{cfg.norm}"
+    path = os.path.join(CACHE, f"tiny_lm_{tag}_{TRAIN_STEPS}")
+    if os.path.isdir(path):
+        params, _ = load_tree(path)
+        return cfg, params, bundle
+    _, _, train_toks, _, _ = bundle
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    pipe = DataPipeline(train_toks, batch_size=16, seq_len=64, seed=0)
+    step_fn = make_train_step(
+        cfg, lr_schedule=warmup_cosine(3e-3, 20, TRAIN_STEPS), clip_norm=1.0)
+    opt = init_opt_state(cfg, params)
+    rng = jax.random.PRNGKey(1)
+    t0 = time.time()
+    for s in range(TRAIN_STEPS):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()}
+        params, opt, m = step_fn(params, opt, batch, jnp.asarray(s), rng)
+        if verbose and s % 100 == 0:
+            print(f"[tiny-lm] step {s} loss {float(m['loss']):.4f} "
+                  f"({time.time() - t0:.0f}s)")
+    save_tree(path, params, {"steps": TRAIN_STEPS})
+    if verbose:
+        print(f"[tiny-lm] trained {TRAIN_STEPS} steps in "
+              f"{time.time() - t0:.0f}s -> {path}")
+    return cfg, params, bundle

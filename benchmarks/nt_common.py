@@ -1,0 +1,52 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core.calibration.generator import generate_calibration
+from repro.core.normtweak.pipeline import NTConfig, norm_tweak_ptq
+from repro.core.quant.outliers import inject_outliers
+from repro.train.evaluate import perplexity
+
+# the paper grid-searches the tweak LR per model; this is our default grid
+# (validated on the RMSNorm tiny model: W2g64 optimum sits at 6e-3..1e-2)
+LR_GRID = (1e-3, 3e-3, 1e-2)
+EVAL_KW = dict(seq_len=64, batch_size=8, max_windows=48)
+
+
+def eval_model(cfg, params, tokens):
+    return perplexity(cfg, params, tokens, **EVAL_KW)
+
+
+def outlier_model(cfg, params):
+    """The paper's large-LLM failure mode, injected float-equivalently."""
+    return inject_outliers(cfg, params, n_channels=12, factor=60.0)
+
+
+def make_calib(cfg, params, meta, n_samples=32, token_length=64, seed=7):
+    return generate_calibration(
+        cfg, params, jax.random.PRNGKey(seed), n_samples=n_samples,
+        token_length=token_length,
+        allowed_first=meta.top_language_tokens(2))
+
+
+def quantize_with(cfg, params, calib, held, *, method, bits, group_size=-1,
+                  act_bits=0, tweak=False, lr_grid=LR_GRID, iters=1,
+                  lr_scale=2.0, sample_batch=4, loss="dist", target="fstream"):
+    """Quantize (optionally +NT with LR grid search). Returns (result, secs)."""
+    best = None
+    t0 = time.time()
+    grid = lr_grid if tweak else (0.0,)
+    for lr0 in grid:
+        nt = NTConfig(method=method, bits=bits, group_size=group_size,
+                      act_bits=act_bits, tweak=tweak, iters=iters, lr0=lr0,
+                      lr_scale=lr_scale, sample_batch=sample_batch,
+                      loss=loss, target=target)
+        qp, stats = norm_tweak_ptq(cfg, params, calib, nt)
+        r = eval_model(cfg, qp, held)
+        r["lr0"] = lr0
+        if best is None or r["ppl"] < best[0]["ppl"]:
+            best = (r, qp, stats)
+    return best[0], best[1], time.time() - t0

@@ -1,0 +1,33 @@
+"""Table 10 analogue: AWQ vs GPTQ at low bits, and Norm-Tweaking as a plugin
+on AWQ (the paper shows NT composing with the strongest PTQ of its day)."""
+from __future__ import annotations
+
+from benchmarks.common import get_trained_tiny
+from benchmarks.nt_common import (eval_model, make_calib, outlier_model,
+                                  quantize_with)
+
+
+def run(rows: list):
+    cfg, params, (corpus, meta, train_toks, held, evals) = get_trained_tiny()
+    mdl = outlier_model(cfg, params)
+    calib = make_calib(cfg, mdl, meta)
+    rf = eval_model(cfg, mdl, held)
+    rows.append(("table10/fp32", 0.0, f"ppl={rf['ppl']:.4f}"))
+    for bits, gs, name in [(3, -1, "W3"), (2, 64, "W2g64")]:
+        for method in ("awq", "gptq"):
+            r0, _, s0 = quantize_with(cfg, mdl, calib, held, method=method,
+                                      bits=bits, group_size=gs, tweak=False)
+            rows.append((f"table10/{name}/{method}", s0 * 1e6,
+                         f"ppl={r0['ppl']:.4f}"))
+        r1, _, s1 = quantize_with(cfg, mdl, calib, held, method="awq",
+                                  bits=bits, group_size=gs, tweak=True)
+        rows.append((f"table10/{name}/awq+nt", s1 * 1e6,
+                     f"ppl={r1['ppl']:.4f};lr={r1['lr0']:g}"))
+    return rows
+
+
+if __name__ == "__main__":
+    out = []
+    run(out)
+    for r in out:
+        print(",".join(str(x) for x in r))

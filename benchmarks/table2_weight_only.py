@@ -1,0 +1,43 @@
+"""Table 2 analogue: W4/W2 weight-only quantization, GPTQ vs GPTQ+NT.
+
+Paper: LAMBADA accuracy on BLOOM/LLaMa/GLM/OPT at W4 and W2(g64).
+Here: heldout PPL + last-token accuracy of the trained tiny llama-family LM,
+on both the plain model and the outlier-injected variant (the controlled
+reproduction of the large-LLM pathology — see core/quant/outliers.py).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import get_trained_tiny
+from benchmarks.nt_common import (eval_model, make_calib, outlier_model,
+                                  quantize_with)
+
+
+def run(rows: list):
+    cfg, params, (corpus, meta, train_toks, held, evals) = get_trained_tiny()
+    models = {"plain": params, "outlier": outlier_model(cfg, params)}
+    for tag, mdl in models.items():
+        t0 = time.time()
+        rf = eval_model(cfg, mdl, held)
+        rows.append((f"table2/{tag}/fp32", (time.time() - t0) * 1e6,
+                     f"ppl={rf['ppl']:.4f};acc={rf['last_acc']:.4f}"))
+        calib = make_calib(cfg, mdl, meta)
+        for bits, gs, name in [(4, -1, "W4"), (2, 64, "W2g64")]:
+            r0, _, s0 = quantize_with(cfg, mdl, calib, held, method="gptq",
+                                      bits=bits, group_size=gs, tweak=False)
+            rows.append((f"table2/{tag}/{name}/gptq", s0 * 1e6,
+                         f"ppl={r0['ppl']:.4f};acc={r0['last_acc']:.4f}"))
+            r1, _, s1 = quantize_with(cfg, mdl, calib, held, method="gptq",
+                                      bits=bits, group_size=gs, tweak=True)
+            rows.append((f"table2/{tag}/{name}/gptq+nt", s1 * 1e6,
+                         f"ppl={r1['ppl']:.4f};acc={r1['last_acc']:.4f};"
+                         f"lr={r1['lr0']:g};dppl={r0['ppl'] - r1['ppl']:+.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    out = []
+    run(out)
+    for r in out:
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,40 @@
+"""Table 3 analogue: quantization runtime, GPTQ vs GPTQ+NT.
+
+Paper: minutes on A100 for BLOOM-7B/LLaMA-7B/OPT-13B; NT overhead < GPTQ
+itself (16-76%). Here: seconds on CPU for the tiny model; the derived column
+reports the NT overhead fraction.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import get_trained_tiny
+from benchmarks.nt_common import make_calib
+from repro.core.normtweak.pipeline import NTConfig, norm_tweak_ptq
+
+
+def run(rows: list):
+    cfg, params, (corpus, meta, train_toks, held, evals) = get_trained_tiny()
+    calib = make_calib(cfg, params, meta)
+
+    def timed(tweak):
+        nt = NTConfig(method="gptq", bits=4, tweak=tweak, lr0=1e-3, iters=1,
+                      sample_batch=4)
+        t0 = time.time()
+        norm_tweak_ptq(cfg, params, calib, nt)
+        return time.time() - t0
+
+    timed(False)  # warm the jit caches so the comparison is fair
+    t_gptq = timed(False)
+    t_nt = timed(True)
+    rows.append(("table3/gptq", t_gptq * 1e6, "baseline"))
+    rows.append(("table3/gptq+nt", t_nt * 1e6,
+                 f"overhead={100 * (t_nt - t_gptq) / t_gptq:.0f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    out = []
+    run(out)
+    for r in out:
+        print(",".join(str(x) for x in r))

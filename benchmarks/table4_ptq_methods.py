@@ -1,0 +1,42 @@
+"""Table 4 analogue: Norm-Tweaking as a plugin on RTN and SmoothQuant.
+
+Paper: RTN W4A16 and SmoothQuant W4A8 (+NT) on BLOOM-7B/OPT-13B. Run on the
+outlier-injected model, where activation quantization actually bites (the
+phenomenon SmoothQuant exists for)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import get_trained_tiny
+from benchmarks.nt_common import (eval_model, make_calib, outlier_model,
+                                  quantize_with)
+
+
+def run(rows: list):
+    cfg, params, (corpus, meta, train_toks, held, evals) = get_trained_tiny()
+    mdl = outlier_model(cfg, params)
+    rf = eval_model(cfg, mdl, held)
+    rows.append(("table4/fp32", 0.0, f"ppl={rf['ppl']:.4f}"))
+    calib = make_calib(cfg, mdl, meta)
+
+    cases = [("rtn_w4a16", dict(method="rtn", bits=4)),
+             ("smoothquant_w4a8", dict(method="smoothquant", bits=4,
+                                       act_bits=8)),
+             ("smoothquant_w8a8", dict(method="smoothquant", bits=8,
+                                       act_bits=8)),
+             ("rtn_w8a8", dict(method="rtn", bits=8, act_bits=8))]
+    for name, kw in cases:
+        r0, _, s0 = quantize_with(cfg, mdl, calib, held, tweak=False, **kw)
+        rows.append((f"table4/{name}", s0 * 1e6, f"ppl={r0['ppl']:.4f}"))
+        r1, _, s1 = quantize_with(cfg, mdl, calib, held, tweak=True, **kw)
+        rows.append((f"table4/{name}+nt", s1 * 1e6,
+                     f"ppl={r1['ppl']:.4f};lr={r1['lr0']:g};"
+                     f"dppl={r0['ppl'] - r1['ppl']:+.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    out = []
+    run(out)
+    for r in out:
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,25 @@
+"""Table 9 analogue: tweak-loss ablation — L_dist vs L_MSE vs L_KL."""
+from __future__ import annotations
+
+from benchmarks.common import get_trained_tiny
+from benchmarks.nt_common import make_calib, outlier_model, quantize_with
+
+
+def run(rows: list):
+    cfg, params, (corpus, meta, train_toks, held, evals) = get_trained_tiny()
+    mdl = outlier_model(cfg, params)
+    calib = make_calib(cfg, mdl, meta)
+    for loss in ["dist", "mse", "kl"]:
+        r, _, s = quantize_with(cfg, mdl, calib, held, method="gptq", bits=2,
+                                group_size=64, tweak=True, loss=loss)
+        rows.append((f"table9/{loss}", s * 1e6,
+                     f"ppl={r['ppl']:.4f};acc={r['last_acc']:.4f};"
+                     f"lr={r['lr0']:g}"))
+    return rows
+
+
+if __name__ == "__main__":
+    out = []
+    run(out)
+    for r in out:
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,94 @@
+"""Checkpoint store: nested-dict pytrees (incl. QuantizedTensor leaves) to
+an npz + JSON-manifest directory, written atomically (tmp dir + rename) so a
+failure mid-save never corrupts the latest checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant.types import QuantizedTensor
+
+_QT_KEY = "__quantized_tensor__"
+
+
+def _to_plain(tree: Any) -> Any:
+    """QuantizedTensor -> tagged dict; leaves stay arrays."""
+    if isinstance(tree, QuantizedTensor):
+        return {_QT_KEY: {"qw": tree.qw, "scale": tree.scale,
+                          "bits": tree.bits, "group_size": tree.group_size,
+                          "shape": list(tree.shape),
+                          "act_bits": tree.act_bits}}
+    if isinstance(tree, dict):
+        return {k: _to_plain(v) for k, v in tree.items()}
+    return tree
+
+
+def _from_plain(tree: Any) -> Any:
+    if isinstance(tree, dict):
+        if _QT_KEY in tree:
+            d = tree[_QT_KEY]
+            return QuantizedTensor(d["qw"], d["scale"], int(d["bits"]),
+                                   int(d["group_size"]), tuple(d["shape"]),
+                                   int(d.get("act_bits", 0)))
+        return {k: _from_plain(v) for k, v in tree.items()}
+    return tree
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            assert "/" not in str(k), f"key {k} contains '/'"
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def save_tree(path: str, tree: Any, extra_meta: dict | None = None) -> None:
+    plain = _to_plain(tree)
+    flat = _flatten(plain)
+    arrays, scalars = {}, {}
+    for k, v in flat.items():
+        if isinstance(v, (jax.Array, np.ndarray)):
+            arrays[k] = np.asarray(v)
+        else:
+            scalars[k] = v
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=os.path.dirname(path) or ".",
+                           prefix=".ckpt_tmp_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        meta = {"scalars": scalars, "extra": extra_meta or {}}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp, ignore_errors=True)
+
+
+def load_tree(path: str) -> tuple[Any, dict]:
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    npz = np.load(os.path.join(path, "arrays.npz"))
+    flat: dict[str, Any] = {k: jnp.asarray(npz[k]) for k in npz.files}
+    flat.update(meta["scalars"])
+    tree: dict = {}
+    for key, val in flat.items():
+        node = tree
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return _from_plain(tree), meta["extra"]

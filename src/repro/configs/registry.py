@@ -1,0 +1,51 @@
+"""Architecture registry: `--arch <id>` resolution for all assigned archs."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import LayerSpec, ModelConfig
+
+_MODULES = {
+    "qwen2-0.5b": "repro.configs.qwen2_0_5b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "llama3.2-1b": "repro.configs.llama3_2_1b",
+    "granite-20b": "repro.configs.granite_20b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+}
+
+# a tiny paper-style config used by examples/tests (the "paper's own" model:
+# a small LLaMa-family decoder, where the paper reports its largest NT gains).
+# RMSNorm (no re-centering) lets quantization drift accumulate with depth —
+# the Figure-1 phenomenon — and 8 blocks make it visible.
+TINY = ModelConfig(
+    name="tiny-lm", family="dense", vocab_size=256, d_model=192, n_heads=4,
+    n_kv_heads=4, head_dim=48, d_ff=576,
+    pattern=(LayerSpec(kind="attn", mlp="dense"),), n_repeats=8,
+    norm="rmsnorm", act="silu", rope="full", remat=False)
+
+
+def list_archs() -> list[str]:
+    return list(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name in ("tiny", "tiny-lm"):
+        return TINY
+    mod = importlib.import_module(_MODULES[name])
+    cfg = mod.CONFIG
+    cfg.validate()
+    return cfg
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    if name in ("tiny", "tiny-lm"):
+        return TINY
+    mod = importlib.import_module(_MODULES[name])
+    cfg = mod.SMOKE
+    cfg.validate()
+    return cfg

@@ -1,0 +1,88 @@
+"""Calibration data generation (paper §Calibration Data Generation).
+
+Variants (Table 8):
+  * real        — sampled windows from a real corpus (GPTQ default);
+  * random      — uniform random token ids (the paper's failing baseline);
+  * gen_v1      — LLM-QAT two-stage self-generation, first token uniform
+                  over the whole vocabulary;
+  * gen_v2      — ours/paper: first token restricted to the top corpus
+                  languages (language-scope restriction).
+
+Two-stage sampling (LLM-QAT): the first `stochastic_prefix` tokens are drawn
+from the softmax distribution (temperature 1), the remainder greedily — the
+generated text both activates the model's "neurons" and stays coherent.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import init_cache, lm_decode
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "length", "stochastic_prefix"))
+def _generate_batch(cfg: ModelConfig, params, first_tokens, key, length,
+                    stochastic_prefix=4, temperature=1.0):
+    b = first_tokens.shape[0]
+    cache = init_cache(cfg, b, length)
+
+    def step(carry, t):
+        cache, tok, key = carry
+        key, sk = jax.random.split(key)
+        pos = jnp.full((b, 1), t, jnp.int32)
+        logits, cache = lm_decode(cfg, params, tok, cache, pos)
+        sampled = jax.random.categorical(sk, logits / temperature, axis=-1)
+        greedy = jnp.argmax(logits, axis=-1)
+        nxt = jnp.where(t < stochastic_prefix, sampled, greedy).astype(jnp.int32)
+        return (cache, nxt[:, None], key), tok[:, 0]
+
+    (_, _, _), toks = jax.lax.scan(
+        step, (cache, first_tokens[:, None], key),
+        jnp.arange(length, dtype=jnp.int32))
+    return toks.T                                                # (B, length)
+
+
+def generate_calibration(cfg: ModelConfig, params, key, *, n_samples: int,
+                         token_length: int,
+                         allowed_first: Optional[np.ndarray] = None,
+                         stochastic_prefix: int = 4,
+                         batch_size: int = 16) -> jax.Array:
+    """Self-generated calibration set (n_samples, token_length)."""
+    out = []
+    done = 0
+    while done < n_samples:
+        b = min(batch_size, n_samples - done)
+        key, k1, k2 = jax.random.split(key, 3)
+        if allowed_first is not None:
+            idx = jax.random.randint(k1, (b,), 0, len(allowed_first))
+            first = jnp.asarray(allowed_first)[idx].astype(jnp.int32)
+        else:
+            first = jax.random.randint(k1, (b,), 0, cfg.vocab_size,
+                                       dtype=jnp.int32)
+        toks = _generate_batch(cfg, params, first, k2, token_length,
+                               stochastic_prefix)
+        out.append(toks[:b])
+        done += b
+    return jnp.concatenate(out, axis=0)
+
+
+def random_calibration(cfg: ModelConfig, key, *, n_samples: int,
+                       token_length: int) -> jax.Array:
+    return jax.random.randint(key, (n_samples, token_length), 0,
+                              cfg.vocab_size, dtype=jnp.int32)
+
+
+def real_calibration(corpus: np.ndarray, key, *, n_samples: int,
+                     token_length: int) -> jax.Array:
+    n_windows = (len(corpus) - 1) // token_length
+    idx = jax.random.randint(key, (n_samples,), 0, n_windows)
+    starts = np.asarray(idx) * token_length
+    return jnp.asarray(
+        np.stack([corpus[s:s + token_length] for s in starts])).astype(
+            jnp.int32)

@@ -1,0 +1,50 @@
+"""Distribution losses for norm tweaking (paper Eq. 2 + Table 9 ablations).
+
+L_dist: per-channel |Δmean| + |Δvar| averaged over channels — the paper's
+relaxed alignment (channel structure preserved, no point-wise overfit).
+L_mse and L_kl are the Table 9 baselines.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def channel_stats(x: jax.Array):
+    """x: (..., C) -> (mean (C,), var (C,)) over all token dims, in f32."""
+    xf = x.astype(jnp.float32).reshape(-1, x.shape[-1])
+    mu = jnp.mean(xf, axis=0)
+    var = jnp.var(xf, axis=0)
+    return mu, var
+
+
+def l_dist(f: jax.Array, q: jax.Array) -> jax.Array:
+    """Channel-wise distribution loss (Eq. 2)."""
+    mu_f, var_f = channel_stats(f)
+    mu_q, var_q = channel_stats(q)
+    return jnp.mean(jnp.abs(mu_f - mu_q) + jnp.abs(var_f - var_q))
+
+
+def l_mse(f: jax.Array, q: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.square(f.astype(jnp.float32) - q.astype(jnp.float32)))
+
+
+def l_kl(f: jax.Array, q: jax.Array) -> jax.Array:
+    """Per-channel Gaussian KL(f || q) from matched moments."""
+    mu_f, var_f = channel_stats(f)
+    mu_q, var_q = channel_stats(q)
+    var_f = jnp.maximum(var_f, 1e-8)
+    var_q = jnp.maximum(var_q, 1e-8)
+    kl = 0.5 * (jnp.log(var_q / var_f) +
+                (var_f + jnp.square(mu_f - mu_q)) / var_q - 1.0)
+    return jnp.mean(kl)
+
+
+LOSSES = {"dist": l_dist, "mse": l_mse, "kl": l_kl}
+
+
+def activation_divergence(f: jax.Array, q: jax.Array) -> jax.Array:
+    """Figure-1 metric: mean absolute per-channel mean difference Δ_u."""
+    mu_f, _ = channel_stats(f)
+    mu_q, _ = channel_stats(q)
+    return jnp.mean(jnp.abs(mu_f - mu_q))

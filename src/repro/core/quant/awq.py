@@ -1,0 +1,42 @@
+"""AWQ (Lin et al. 2023): activation-aware weight quantization.
+
+Per-input-channel scales s = amax_x^alpha protect salient weight channels;
+alpha is grid-searched to minimize the *output* reconstruction error on
+calibration activations. Like SmoothQuant the scale is an exact float
+transform (folded into the producing norm); unlike SmoothQuant it optimizes
+for weight-only quantization (no activation quant).
+
+The paper's Table 10 positions Norm-Tweaking against / on top of AWQ — here
+AWQ is another base quantizer the NT plugin attaches to.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant.types import fake_quant
+
+
+def awq_search_scales(x: jax.Array, ws: list[jax.Array], *, bits: int,
+                      group_size: int = -1, n_grid: int = 9):
+    """x: (..., K) calibration input shared by `ws`; returns (s (K,), alpha)."""
+    xf = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(xf), axis=0), 1e-5)
+
+    best = (None, jnp.inf, 0.0)
+    for i in range(n_grid):
+        alpha = i / (n_grid - 1)
+        s = amax ** alpha
+        s = s / jnp.sqrt(jnp.maximum(jnp.max(s) * jnp.min(s), 1e-10))
+        s = jnp.clip(s, 1e-4, 1e4)
+        err = 0.0
+        for w in ws:
+            wf = w.astype(jnp.float32)
+            wq = fake_quant(wf * s[:, None], bits, group_size) / s[:, None]
+            y = xf @ wf
+            yq = xf @ wq
+            err += jnp.mean((y - yq) ** 2)
+        err = float(err)
+        if err < best[1]:
+            best = (s, err, alpha)
+    return best[0], best[2]

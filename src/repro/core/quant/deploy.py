@@ -1,0 +1,33 @@
+"""Deployment transform: convert a float param tree to packed low-bit
+weights (RTN path — the NT pipeline produces its own QuantizedTensors).
+Shape-deterministic, so it composes with jax.eval_shape for the dry-run."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.quant.blockquant import iter_linears
+from repro.core.quant.types import quantize_stacked
+from repro.models.config import ModelConfig
+from repro.utils.tree import tree_set
+
+_SKIP = ("embed", "lm_head", "pos", "router", "conv")
+
+
+def quantize_params_for_serving(cfg: ModelConfig, params: dict,
+                                bits: int = 0, group_size: int = 0) -> dict:
+    bits = bits or cfg.serve_quant_bits
+    group_size = group_size or cfg.serve_quant_group
+    if not bits:
+        return params
+    for path, lin in list(iter_linears(params)):
+        if any(s in path for s in _SKIP):
+            continue
+        w = lin["w"]
+        if w.shape[-2] % (group_size if group_size > 0 else 1):
+            gs = -1  # fall back to per-channel when K isn't divisible
+        else:
+            gs = group_size
+        new_lin = dict(lin)
+        new_lin["w"] = quantize_stacked(w, bits, gs)
+        params = tree_set(params, path, new_lin)
+    return params

@@ -1,0 +1,69 @@
+"""Outlier injection: a float-EQUIVALENT transform that reproduces the
+large-LLM activation-outlier pathology in a small model.
+
+Large transformers develop per-channel activation outliers (LLM.int8,
+SmoothQuant): a few residual-stream channels carry values 10-100x larger
+than the rest, and the norm layers amplify them. Symmetric per-output-channel
+weight quantization then systematically destroys the small-magnitude weight
+rows that read those channels, producing exactly the accumulating
+distribution drift the paper's Figure 1 shows.
+
+A tiny CPU-trainable model lacks this structure, so the reproduction
+injects it *exactly*: for selected channels C and factor f,
+    norm.scale[C] *= f   (and bias[C] *= f)
+    w[C, :]       /= f   for every linear reading the norm's output.
+The float model is bit-for-bit-modulo-rounding unchanged; the quantized
+model is not — giving norm tweaking (and SmoothQuant) precisely the failure
+mode they were designed to fix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import block_spec, get_block, num_blocks
+from repro.core.normtweak.pipeline import _restack
+from repro.utils.tree import tree_get, tree_set
+
+# linears fed by each norm, per block layout (dense GQA decoder)
+_NORM_CONSUMERS = {
+    "ln1": ["attn/wq", "attn/wk", "attn/wv", "mamba/in_proj"],
+    "ln2": ["mlp/wi", "mlp/wg", "moe/shared/wi", "moe/shared/wg"],
+}
+
+
+def _exists(tree, path):
+    node = tree
+    for k in path.split("/"):
+        if not isinstance(node, dict) or k not in node:
+            return False
+        node = node[k]
+    return True
+
+
+def inject_outliers(cfg: ModelConfig, params: dict, *, n_channels: int = 8,
+                    factor: float = 40.0, seed: int = 0) -> dict:
+    key = jax.random.PRNGKey(seed)
+    chans = jax.random.choice(key, cfg.d_model, (n_channels,), replace=False)
+    scale_vec = jnp.ones((cfg.d_model,)).at[chans].set(factor)
+
+    blocks = []
+    for i in range(num_blocks(cfg)):
+        bp = get_block(cfg, params, i)
+        for norm_key, consumers in _NORM_CONSUMERS.items():
+            if not _exists(bp, norm_key):
+                continue
+            npar = dict(tree_get(bp, norm_key))
+            npar["scale"] = npar["scale"] * scale_vec
+            if "bias" in npar:
+                npar["bias"] = npar["bias"] * scale_vec
+            bp = tree_set(bp, norm_key, npar)
+            for c in consumers:
+                if not _exists(bp, c):
+                    continue
+                lin = dict(tree_get(bp, c))
+                lin["w"] = lin["w"] / scale_vec[:, None]
+                bp = tree_set(bp, c, lin)
+        blocks.append(bp)
+    return _restack(cfg, params, blocks)

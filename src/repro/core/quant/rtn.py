@@ -1,0 +1,20 @@
+"""Round-to-nearest baseline quantizer (Table 4 of the paper)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.quant.types import (QuantizedTensor, quantize,
+                                    quantize_stacked)
+
+
+def rtn_quantize(w: jax.Array, *, bits: int, group_size: int = -1,
+                 act_bits: int = 0) -> QuantizedTensor:
+    """RTN for (K, N) or stacked (E, K, N) weights."""
+    if w.ndim == 3:
+        qt = quantize_stacked(w, bits, group_size)
+    else:
+        qt = quantize(w, bits, group_size)
+    if act_bits:
+        qt = QuantizedTensor(qt.qw, qt.scale, qt.bits, qt.group_size,
+                             qt.shape, act_bits)
+    return qt

@@ -1,0 +1,38 @@
+"""SmoothQuant (Xiao et al. 2023): migrate activation outliers into weights.
+
+For a group of linears fed by the same normalization layer, compute
+per-input-channel smoothing factors s_j = amax_x_j^alpha / amax_w_j^(1-alpha),
+scale weight rows by s and fold 1/s into the norm's scale (and bias) — an
+exactly-equivalent transform in float that makes W·A8 quantization viable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def smooth_scales(act_amax: jax.Array, ws: list[jax.Array],
+                  alpha: float = 0.5) -> jax.Array:
+    """act_amax: (K,) per-channel |x| max; ws: list of (K, N) sharing input."""
+    w_amax = jnp.max(jnp.stack([jnp.max(jnp.abs(w), axis=1) for w in ws]),
+                     axis=0)                                      # (K,)
+    act_amax = jnp.maximum(act_amax.astype(jnp.float32), 1e-5)
+    w_amax = jnp.maximum(w_amax.astype(jnp.float32), 1e-5)
+    s = act_amax ** alpha / w_amax ** (1.0 - alpha)
+    return jnp.clip(s, 1e-5, 1e5)
+
+
+def fold_into_norm(norm_params: dict, s: jax.Array) -> dict:
+    """Divide the producing norm's affine params by s (x' = x / s)."""
+    out = dict(norm_params)
+    out["scale"] = (norm_params["scale"].astype(jnp.float32) / s).astype(
+        norm_params["scale"].dtype)
+    if "bias" in norm_params:
+        out["bias"] = (norm_params["bias"].astype(jnp.float32) / s).astype(
+            norm_params["bias"].dtype)
+    return out
+
+
+def scale_weight_rows(w: jax.Array, s: jax.Array) -> jax.Array:
+    """w' = diag(s) @ w  (compensates the activation division)."""
+    return (w.astype(jnp.float32) * s[:, None]).astype(w.dtype)

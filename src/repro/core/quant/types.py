@@ -1,0 +1,195 @@
+"""Quantized tensor representation + symmetric per-channel / group quantizers.
+
+Layout convention: linear weights are (K, N) = (d_in, d_out); `out = x @ w`.
+Quantization grid is *symmetric* (FasterTransformer-compatible, as in the
+paper): q in [-qmax, qmax], qmax = 2^(bits-1) - 1, value = q * scale.
+Scales are per output-channel and per input-group: scale[g, n] applies to
+rows k in [g*group_size, (g+1)*group_size).
+
+Packing: values are stored offset-binary (u = q + qmax, fits in `bits` bits)
+and packed along K into uint8, `8 // bits` values per byte (bits in {2,4,8};
+3-bit is stored unpacked, one value per byte — density noted in DESIGN.md).
+Packing along K keeps unpacking lane-local on TPU (see kernels/dequant_matmul).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def qmax_for_bits(bits: int) -> int:
+    return 2 ** (bits - 1) - 1
+
+
+def values_per_byte(bits: int) -> int:
+    return {2: 4, 3: 1, 4: 2, 8: 1}[bits]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Packed low-bit weight. Drop-in leaf for a linear's `w`."""
+
+    qw: Any        # uint8 (K_packed, N); experts: (E, K_packed, N)
+    scale: Any     # (n_groups, N) float; experts: (E, n_groups, N)
+    bits: int      # static
+    group_size: int  # static; -1 means one group over all of K
+    shape: tuple   # static original (K, N) or (E, K, N)
+    act_bits: int = 0  # static; >0 => fake-quant activations (SmoothQuant A8)
+
+    def tree_flatten(self):
+        return (self.qw, self.scale), (self.bits, self.group_size, self.shape,
+                                       self.act_bits)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def k(self) -> int:
+        return self.shape[-2]
+
+    @property
+    def n(self) -> int:
+        return self.shape[-1]
+
+    def nbytes(self) -> int:
+        qb = int(np.prod(self.qw.shape)) * 1
+        sb = int(np.prod(self.scale.shape)) * self.scale.dtype.itemsize
+        return qb + sb
+
+
+def _group_count(k: int, group_size: int) -> int:
+    if group_size == -1:
+        return 1
+    assert k % group_size == 0, f"K={k} not divisible by group_size={group_size}"
+    return k // group_size
+
+
+def compute_scales(w: jax.Array, bits: int, group_size: int = -1) -> jax.Array:
+    """Symmetric scales: (n_groups, N). w is (K, N)."""
+    k, n = w.shape
+    g = _group_count(k, group_size)
+    wg = w.reshape(g, k // g, n)
+    amax = jnp.max(jnp.abs(wg), axis=1)
+    scale = amax / qmax_for_bits(bits)
+    return jnp.maximum(scale, 1e-10).astype(jnp.float32)
+
+
+def quantize_values(w: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
+    """Round to the symmetric grid. Returns int32 q in [-qmax, qmax], (K, N)."""
+    k, n = w.shape
+    g = scale.shape[0]
+    qmax = qmax_for_bits(bits)
+    wg = w.reshape(g, k // g, n)
+    q = jnp.round(wg / scale[:, None, :])
+    q = jnp.clip(q, -qmax, qmax)
+    return q.reshape(k, n).astype(jnp.int32)
+
+
+def pack(q: jax.Array, bits: int) -> jax.Array:
+    """Pack offset-binary values along K into uint8. q: int32 (K, N)."""
+    k, n = q.shape
+    qmax = qmax_for_bits(bits)
+    u = (q + qmax).astype(jnp.uint8)
+    vpb = values_per_byte(bits)
+    if vpb == 1:
+        return u
+    pad = (-k) % vpb
+    if pad:
+        u = jnp.concatenate([u, jnp.zeros((pad, n), jnp.uint8)], axis=0)
+    u = u.reshape(-1, vpb, n)
+    out = jnp.zeros((u.shape[0], n), jnp.uint8)
+    for i in range(vpb):
+        out = out | (u[:, i, :] << (bits * i))
+    return out
+
+
+def unpack(qw: jax.Array, bits: int, k: int) -> jax.Array:
+    """Inverse of `pack`: returns int32 q in [-qmax, qmax], (K, N)."""
+    qmax = qmax_for_bits(bits)
+    vpb = values_per_byte(bits)
+    if vpb == 1:
+        return qw.astype(jnp.int32) - qmax
+    mask = (1 << bits) - 1
+    parts = [((qw >> (bits * i)) & mask) for i in range(vpb)]
+    u = jnp.stack(parts, axis=1).reshape(-1, qw.shape[1])
+    return u[:k].astype(jnp.int32) - qmax
+
+
+def quantize(w: jax.Array, bits: int, group_size: int = -1,
+             scale: jax.Array | None = None) -> QuantizedTensor:
+    """RTN-quantize a (K, N) weight to a packed QuantizedTensor."""
+    if scale is None:
+        scale = compute_scales(w, bits, group_size)
+    q = quantize_values(w, scale, bits)
+    return QuantizedTensor(pack(q, bits), scale, bits, group_size, tuple(w.shape))
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
+    """Works for any leading batch dims (experts and/or scan stacking):
+    the trailing (K, N) come from the static shape, leading dims from qw
+    itself (scan slices leaves without touching the static aux)."""
+    k, n = qt.shape[-2], qt.shape[-1]
+    lead = qt.qw.shape[:-2]
+    if not lead:
+        return _dequant2d(qt.qw, qt.scale, qt.bits, k, n).astype(dtype)
+    qw = qt.qw.reshape((-1,) + qt.qw.shape[-2:])
+    sc = qt.scale.reshape((-1,) + qt.scale.shape[-2:])
+    fn = jax.vmap(lambda q, s: _dequant2d(q, s, qt.bits, k, n))
+    return fn(qw, sc).reshape(lead + (k, n)).astype(dtype)
+
+
+def _dequant2d(qw, scale, bits, k, n):
+    q = unpack(qw, bits, k)
+    g = scale.shape[0]
+    if g == 1:
+        return q.astype(jnp.float32) * scale
+    # reshape-free: expanding scales by row-gather keeps the (K, N) value
+    # tensor's sharding intact under SPMD (a (g, K/g, N) reshape forces a
+    # regather whenever g doesn't divide the mesh axis)
+    rows = jnp.arange(k) // (k // g)
+    return q.astype(jnp.float32) * scale[rows]
+
+
+def quantize_stacked(w: jax.Array, bits: int, group_size: int = -1) -> QuantizedTensor:
+    """RTN-quantize weights with any leading batch dims (..., K, N)."""
+
+    def one(wi):
+        s = compute_scales(wi, bits, group_size)
+        return pack(quantize_values(wi, s, bits), bits), s
+
+    lead = w.shape[:-2]
+    if not lead:
+        return quantize(w, bits, group_size)
+    qw, scale = jax.vmap(one)(w.reshape((-1,) + w.shape[-2:]))
+    return QuantizedTensor(qw.reshape(lead + qw.shape[-2:]),
+                           scale.reshape(lead + scale.shape[-2:]),
+                           bits, group_size, tuple(w.shape))
+
+
+def fake_quant(w: jax.Array, bits: int, group_size: int = -1,
+               scale: jax.Array | None = None) -> jax.Array:
+    """Quantize->dequantize without packing (same grid as `quantize`)."""
+    if scale is None:
+        scale = compute_scales(w, bits, group_size)
+    k, n = w.shape
+    g = scale.shape[0]
+    q = quantize_values(w, scale, bits).reshape(g, k // g, n)
+    return (q.astype(w.dtype) * scale[:, None, :].astype(w.dtype)).reshape(k, n)
+
+
+def fake_quant_activation(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Dynamic symmetric per-tensor activation fake-quant (SmoothQuant A8)."""
+    qmax = qmax_for_bits(bits)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-10) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return (q * scale).astype(x.dtype)
+
+
+def quantized_like(qt: QuantizedTensor) -> bool:
+    return isinstance(qt, QuantizedTensor)

@@ -1,0 +1,163 @@
+"""Parameter partitioning: map every param leaf to logical axis names by
+path, then to a PartitionSpec / NamedSharding via the rules table.
+
+Handles stacked (scan) leaves — leading repeat dim stays unsharded — and
+QuantizedTensor leaves (qw/scale inherit the weight's output-dim sharding).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.core.quant.types import QuantizedTensor
+from repro.distributed.sharding import DEFAULT_RULES, spec_for
+from repro.models.config import ModelConfig
+
+# (path regex, logical names per trailing dim). First match wins. Names are
+# for the *unstacked* leaf; a leading scan/repeats dim is auto-padded None.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed/w$", ("vocab", "embed")),
+    (r"pos/w$", ("pos", "embed")),
+    (r"lm_head/w$", ("embed_fsdp", "vocab")),
+    # attention
+    (r"attn/wq/w$", ("embed_fsdp", "heads_flat")),
+    (r"attn/wk/w$", ("embed_fsdp", "kv_flat")),
+    (r"attn/wv/w$", ("embed_fsdp", "kv_flat")),
+    (r"attn/wo/w$", ("heads_flat", "embed_fsdp")),
+    (r"attn/wq/b$", ("heads_flat",)),
+    (r"attn/w[kv]/b$", ("kv_flat",)),
+    (r"attn/wo/b$", ("embed",)),
+    # MLA
+    (r"attn/wdkv/w$", ("embed_fsdp", "kv_lora")),
+    (r"attn/wukv/w$", ("kv_lora", "heads_flat")),
+    # MoE — "expert"/"expert_ff" resolve to EP or expert-TP per config
+    (r"moe/router/w$", ("embed", None)),
+    (r"moe/experts/w[ig]/w$", ("expert", "embed_fsdp", "expert_ff")),
+    (r"moe/experts/wo/w$", ("expert", "expert_ff", "embed_fsdp")),
+    (r"(moe/shared/|)w[ig]/w$", ("embed_fsdp", "mlp")),
+    (r"(moe/shared/|)wo/w$", ("mlp", "embed_fsdp")),
+    (r"w[ig]/b$", ("mlp",)),
+    (r"wo/b$", ("embed",)),
+    # mamba2
+    (r"mamba/in_proj/w$", ("embed_fsdp", "mamba_inner")),
+    (r"mamba/out_proj/w$", ("mamba_inner", "embed_fsdp")),
+    (r"mamba/conv_w$", ("conv", None)),
+    (r"mamba/conv_b$", (None,)),
+    (r"mamba/(A_log|D|dt_bias)$", (None,)),
+    # norms and anything else 1-D: replicated
+    (r"(scale|bias)$", (None,)),
+]
+
+# logical names used only in param specs
+PARAM_RULES_EXTRA = {
+    "heads_flat": "model",
+    "kv_flat": "model",
+    "mamba_inner": "model",
+    "embed_fsdp": "data",
+}
+
+
+def rules_for_config(cfg: ModelConfig, mesh=None) -> dict:
+    rules = dict(DEFAULT_RULES)
+    rules.update(PARAM_RULES_EXTRA)
+    rules["expert_ff"] = None
+    if not cfg.fsdp:
+        rules["embed_fsdp"] = None
+    if cfg.moe is not None:
+        model_size = mesh.shape.get("model", 16) if mesh is not None else 16
+        # the dispatch buffer (E, C, d) has no batch dim: its capacity dim
+        # MUST shard over the data axes too, or every data rank replicates
+        # the full expert compute (a 16x FLOP bug found via roofline, §Perf)
+        if cfg.moe.n_experts % model_size != 0:
+            # expert count doesn't divide the TP axis -> tensor-parallel
+            # *within* experts: shard the expert FF dim + the dispatch
+            # capacity instead of the expert dim.
+            # NOTE: capacity over ("data","model") removes the 16x FLOP
+            # replication but XLA SPMD then all-gathers the token slots per
+            # layer (+460% collective bytes, net-worse step time) — the real
+            # fix is a shard_map all-to-all dispatch (future work, §Perf).
+            rules["expert"] = None
+            rules["expert_ff"] = "model"
+            rules["capacity"] = "model"
+        # (EP mode: capacity over "data" likewise trades 16x FLOP
+        # replication for ~6x collective traffic under SPMD — net worse;
+        # see §Perf. shard_map all-to-all dispatch is the correct fix.)
+    return rules
+
+
+def logical_axes_for(path: str, ndim: int) -> tuple:
+    for pat, names in _PARAM_RULES:
+        if re.search(pat, path):
+            if len(names) == ndim:
+                return names
+            if len(names) == ndim - 1:        # stacked (scan) leaf
+                return (None,) + names
+    return (None,) * ndim                     # unknown -> replicated
+
+
+def _walk(tree, prefix, fn):
+    if isinstance(tree, QuantizedTensor):
+        # reached via the linear's "w" key, so `prefix` already ends in /w.
+        # qw (..., Kp, N) shares the weight's names; scale (..., G, N) keeps
+        # only the output-dim sharding
+        wnames = logical_axes_for(prefix, len(tree.shape))
+        pad = tree.qw.ndim - len(wnames)
+        qw_names = (None,) * pad + wnames if pad >= 0 else wnames[-tree.qw.ndim:]
+        sc_names = qw_names[:-2] + (None, qw_names[-1])
+        return QuantizedTensor(fn(prefix + "#qw", tree.qw, qw_names),
+                               fn(prefix + "#scale", tree.scale, sc_names),
+                               tree.bits, tree.group_size, tree.shape,
+                               tree.act_bits)
+    if isinstance(tree, dict):
+        return {k: _walk(v, f"{prefix}/{k}" if prefix else k, fn)
+                for k, v in tree.items()}
+    names = logical_axes_for(prefix, getattr(tree, "ndim", 0))
+    return fn(prefix, tree, names)
+
+
+def param_specs(cfg: ModelConfig, params_shape) -> dict:
+    """Tree of PartitionSpec matching `params_shape` (arrays or SDS)."""
+    rules = rules_for_config(cfg)
+
+    def fn(path, leaf, names):
+        return spec_for(leaf.shape, names, mesh=None, rules=rules)
+
+    # spec_for needs a mesh for divisibility checks; defer: return names
+    return _walk(params_shape, "", lambda p, l, n: n)
+
+
+def param_shardings(mesh, cfg: ModelConfig, params_shape) -> dict:
+    rules = rules_for_config(cfg)
+
+    def fn(path, leaf, names):
+        spec = spec_for(leaf.shape, names, mesh=mesh, rules=rules)
+        return NamedSharding(mesh, spec)
+
+    return _walk(params_shape, "", fn)
+
+
+def shard_struct(mesh, cfg: ModelConfig, params_shape) -> dict:
+    """ShapeDtypeStructs with shardings attached (AOT lowering inputs)."""
+    rules = rules_for_config(cfg)
+
+    def fn(path, leaf, names):
+        spec = spec_for(leaf.shape, names, mesh=mesh, rules=rules)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    return _walk(params_shape, "", fn)
+
+
+def batch_shardings(mesh, tree, names_map: dict) -> dict:
+    """Shardings for input batches: names_map maps leaf key -> logical names."""
+    out = {}
+    for k, v in tree.items():
+        names = names_map.get(k, ("batch",) + (None,) * (v.ndim - 1))
+        out[k] = jax.ShapeDtypeStruct(
+            v.shape, v.dtype,
+            sharding=NamedSharding(mesh, spec_for(v.shape, names, mesh=mesh)))
+    return out

@@ -1,0 +1,121 @@
+"""Logical-axis sharding: MaxText-style rules mapping logical names to mesh axes.
+
+Models annotate activations/params with *logical* axis names ("batch",
+"mlp", "vocab", ...). A rules table maps those to physical mesh axes. When no
+mesh context is active (unit tests on 1 CPU device) every annotation is a
+no-op, so the same model code runs everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Axes = Union[None, str, tuple[str, ...]]
+
+# Default logical->physical rules for the (pod, data, model) production mesh.
+DEFAULT_RULES: dict[str, Axes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "embed_fsdp": ("pod", "data"),   # param embed dim when FSDP is on
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "qk_dim": None,
+    "mlp": "model",
+    "expert": "model",
+    "capacity": None,
+    "kv_seq": None,
+    "kv_lora": None,
+    "conv": None,
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "norm": None,
+    "pos": None,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: dict[str, Axes] = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Optional[Mesh], rules: Optional[dict[str, Axes]] = None):
+    """Activate a mesh + logical rules for model annotations."""
+    old = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = {**DEFAULT_RULES, **(rules or {})}
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = old
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _axis_size(mesh: Mesh, axes: Axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def spec_for(shape: Sequence[int], names: Sequence[Optional[str]],
+             mesh: Optional[Mesh] = None,
+             rules: Optional[dict[str, Axes]] = None) -> PartitionSpec:
+    """Resolve logical names to a PartitionSpec, dropping non-divisible axes."""
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    out = []
+    used: set = set()
+    for dim, name in zip(shape, names):
+        axes = rules.get(name) if name else None
+        if axes is not None and mesh is not None:
+            # drop axes the mesh doesn't have (e.g. "pod" on single-pod)
+            flat = (axes,) if isinstance(axes, str) else tuple(axes)
+            flat = tuple(a for a in flat if a in mesh.shape)
+            axes = None if not flat else (flat[0] if len(flat) == 1 else flat)
+        if axes is not None and mesh is not None:
+            if dim % _axis_size(mesh, axes) != 0:
+                axes = None  # not divisible -> leave unsharded
+        if axes is not None:
+            flat = (axes,) if isinstance(axes, str) else tuple(axes)
+            if any(a in used for a in flat):
+                axes = None  # a mesh axis may appear once per spec
+            else:
+                used.update(flat)
+        out.append(axes)
+    return PartitionSpec(*out)
+
+
+def lc(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Logical sharding constraint. No-op outside a sharding_ctx."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    if len(names) != x.ndim:
+        raise ValueError(f"lc: {len(names)} names for rank-{x.ndim} array")
+    spec = spec_for(x.shape, names, mesh, _CTX.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(shape: Sequence[int], names: Sequence[Optional[str]],
+                   mesh: Optional[Mesh] = None,
+                   rules: Optional[dict[str, Axes]] = None) -> NamedSharding:
+    mesh = mesh or _CTX.mesh
+    assert mesh is not None, "named_sharding requires a mesh"
+    return NamedSharding(mesh, spec_for(shape, names, mesh, rules))

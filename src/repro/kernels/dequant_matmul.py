@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: fused low-bit dequantize + matmul.
+
+The deployment hot-spot of weight-only PTQ (the paper's serving story):
+y = x @ dequant(qw, scale). Packed uint8 weights stream HBM->VMEM at 1/2
+(W4) or 1/4 (W2) of bf16 bytes; nibbles are unpacked with lane-local
+shift/mask ops in VREGs (packing is along K, so no cross-lane movement —
+TPUs have no warp shuffles), scaled per group, and fed to the MXU as
+(bk, bn) bf16 tiles via `jnp.dot(..., preferred_element_type=f32)`.
+
+Grid: (M/bm, N/bn, K/bk), K innermost; the f32 output tile accumulates
+across the K steps in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quant.types import qmax_for_bits, values_per_byte
+
+
+def _dequant_matmul_kernel(x_ref, qw_ref, scale_ref, o_ref, *, bits: int,
+                           group_size: int, bk: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    qw = qw_ref[...]                                   # (bk/vpb, bn) uint8
+    vpb = values_per_byte(bits)
+    qmax = qmax_for_bits(bits)
+    bn = qw.shape[-1]
+    if vpb == 1:
+        u = qw
+    else:
+        mask = (1 << bits) - 1
+        parts = [(qw >> (bits * i)) & mask for i in range(vpb)]
+        u = jnp.stack(parts, axis=1).reshape(bk, bn)   # row r*vpb+i order
+    q = u.astype(jnp.int32) - qmax                     # (bk, bn)
+
+    s = scale_ref[...]                                 # (gb, bn) f32
+    gb = s.shape[0]
+    if gb == 1:
+        w = q.astype(jnp.float32) * s
+    else:
+        w = (q.reshape(gb, bk // gb, bn).astype(jnp.float32) *
+             s[:, None, :]).reshape(bk, bn)
+
+    x = x_ref[...]                                     # (bm, bk)
+    o_ref[...] += jnp.dot(x.astype(jnp.bfloat16),
+                          w.astype(jnp.bfloat16),
+                          preferred_element_type=jnp.float32)
+
+
+def _scale_blockspec(group_size: int, k: int, g: int, bk: int, bn: int):
+    if g == 1:
+        return pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
+    gs = k // g
+    if gs >= bk:
+        assert gs % bk == 0
+        return pl.BlockSpec((1, bn), lambda i, j, kk: (kk * bk // gs, j))
+    assert bk % gs == 0
+    gpb = bk // gs
+    # index_map is in BLOCK units: kv-block kk covers scale rows
+    # [kk*gpb, (kk+1)*gpb) == block row kk of a (gpb, bn) block
+    return pl.BlockSpec((gpb, bn), lambda i, j, kk: (kk, j))
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "bm", "bn",
+                                             "bk", "interpret"))
+def dequant_matmul_pallas(x: jax.Array, qw: jax.Array, scale: jax.Array, *,
+                          bits: int, group_size: int, bm: int = 128,
+                          bn: int = 128, bk: int = 256,
+                          interpret: bool = False) -> jax.Array:
+    """x: (M, K); qw: (K/vpb, N) uint8; scale: (G, N). Returns (M, N) f32."""
+    m, k = x.shape
+    n = qw.shape[1]
+    g = scale.shape[0]
+    vpb = values_per_byte(bits)
+    bm = min(bm, m)
+    bk = min(bk, k)
+    bn = min(bn, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    assert bk % vpb == 0
+
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(_dequant_matmul_kernel, bits=bits,
+                               group_size=group_size, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // vpb, bn), lambda i, j, kk: (kk, j)),
+            _scale_blockspec(group_size, k, g, bk, bn),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, qw, scale.astype(jnp.float32))

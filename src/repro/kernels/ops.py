@@ -1,0 +1,88 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Dispatch: real TPU -> compiled Pallas; CPU -> `interpret=True` when forced
+via REPRO_DEQUANT_IMPL=pallas (tests), else the jnp reference (same math,
+fast on CPU). Handles token-dim padding and block-size selection so callers
+never deal with tiling constraints.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant.types import QuantizedTensor, values_per_byte
+from repro.kernels import ref
+from repro.kernels.channel_stats import channel_stats_pallas
+from repro.kernels.dequant_matmul import dequant_matmul_pallas
+from repro.kernels.quantize import quantize_pack_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pick_block(dim: int, target: int) -> int:
+    if dim <= target:
+        return dim
+    b = target
+    while dim % b != 0:
+        b //= 2
+        if b < 8:
+            return dim  # fall back to a single block
+    return b
+
+
+def dequant_matmul(x: jax.Array, qt: QuantizedTensor, *, out_dtype=None,
+                   bm: int = 128, bn: int = 256, bk: int = 256) -> jax.Array:
+    """x: (M, K) @ packed (K, N) -> (M, N). Pads M to the tile size."""
+    out_dtype = out_dtype or x.dtype
+    m, k = x.shape
+    n = qt.n
+    gs = qt.group_size if qt.group_size != -1 else k
+    bm_ = _pick_block(max(m, 8), bm)
+    pad_m = (-m) % bm_
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    bk_ = _pick_block(k, bk)
+    # keep scale-group tiling consistent
+    vpb = values_per_byte(qt.bits)
+    while (gs < bk_ and bk_ % gs != 0) or (gs >= bk_ and gs % bk_ != 0) or \
+            bk_ % vpb != 0:
+        bk_ //= 2
+        assert bk_ >= vpb, (k, gs, vpb)
+    bn_ = _pick_block(n, bn)
+    y = dequant_matmul_pallas(x, qt.qw, qt.scale, bits=qt.bits,
+                              group_size=qt.group_size, bm=bm_, bn=bn_,
+                              bk=bk_, interpret=_interpret())
+    if pad_m:
+        y = y[:m]
+    return y.astype(out_dtype)
+
+
+def channel_stats(x: jax.Array):
+    """x: (..., C) -> per-channel (mean, var)."""
+    x2 = x.reshape(-1, x.shape[-1])
+    t, c = x2.shape
+    if _interpret() and os.environ.get("REPRO_DEQUANT_IMPL") != "pallas":
+        return ref.channel_stats_ref(x2)
+    bt = _pick_block(t, 256)
+    bc = _pick_block(c, 256)
+    return channel_stats_pallas(x2, bt=bt, bc=bc, interpret=_interpret())
+
+
+def quantize_pack(w: jax.Array, scale: jax.Array, *, bits: int,
+                  group_size: int) -> jax.Array:
+    k, n = w.shape
+    if _interpret() and os.environ.get("REPRO_DEQUANT_IMPL") != "pallas":
+        return ref.quantize_pack_ref(w, scale, bits=bits)
+    gs = group_size if group_size != -1 else k
+    bk = _pick_block(k, 256)
+    vpb = values_per_byte(bits)
+    while (gs < bk and bk % gs != 0) or (gs >= bk and gs % bk != 0) or \
+            bk % vpb != 0:
+        bk //= 2
+    bn = _pick_block(n, 256)
+    return quantize_pack_pallas(w, scale, bits=bits, group_size=group_size,
+                                bk=bk, bn=bn, interpret=_interpret())

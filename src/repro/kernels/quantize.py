@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: RTN quantize + pack (offline/deploy-time path).
+
+Rounds a (K, N) float weight tile to the symmetric grid and packs `vpb`
+offset-binary values per byte along K, writing (bk/vpb, bn) uint8 tiles.
+Keeps the whole quantize->pack in VMEM (no int staging in HBM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quant.types import qmax_for_bits, values_per_byte
+from repro.kernels.dequant_matmul import _scale_blockspec
+
+
+def _quantize_kernel(w_ref, scale_ref, o_ref, *, bits: int, bk: int):
+    w = w_ref[...].astype(jnp.float32)                 # (bk, bn)
+    s = scale_ref[...]                                 # (gb, bn)
+    gb, bn = s.shape
+    qmax = qmax_for_bits(bits)
+    ws = (w.reshape(gb, bk // gb, bn) / s[:, None, :]).reshape(bk, bn)
+    q = jnp.clip(jnp.round(ws), -qmax, qmax).astype(jnp.int32)
+    u = (q + qmax).astype(jnp.uint8)
+    vpb = values_per_byte(bits)
+    if vpb == 1:
+        o_ref[...] = u
+    else:
+        u = u.reshape(bk // vpb, vpb, bn)
+        acc = jnp.zeros((bk // vpb, bn), jnp.uint8)
+        for i in range(vpb):
+            acc = acc | (u[:, i, :] << (bits * i))
+        o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "bk", "bn",
+                                             "interpret"))
+def quantize_pack_pallas(w: jax.Array, scale: jax.Array, *, bits: int,
+                         group_size: int, bk: int = 256, bn: int = 256,
+                         interpret: bool = False) -> jax.Array:
+    """w: (K, N); scale: (G, N). Returns packed uint8 (K/vpb, N)."""
+    k, n = w.shape
+    g = scale.shape[0]
+    vpb = values_per_byte(bits)
+    bk = min(bk, k)
+    bn = min(bn, n)
+    assert k % bk == 0 and n % bn == 0 and bk % vpb == 0
+
+    # reuse the dequant scale indexing, adding a dummy leading grid dim
+    sspec = _scale_blockspec(group_size, k, g, bk, bn)
+    sspec2 = pl.BlockSpec(sspec.block_shape,
+                          lambda kk, j: sspec.index_map(0, j, kk))
+
+    kernel = functools.partial(_quantize_kernel, bits=bits, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(k // bk, n // bn),
+        in_specs=[pl.BlockSpec((bk, bn), lambda kk, j: (kk, j)), sspec2],
+        out_specs=pl.BlockSpec((bk // vpb, bn), lambda kk, j: (kk, j)),
+        out_shape=jax.ShapeDtypeStruct((k // vpb, n), jnp.uint8),
+        interpret=interpret,
+    )(w, scale.astype(jnp.float32))

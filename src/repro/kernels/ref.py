@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant.types import (QuantizedTensor, compute_scales,
+                                    dequantize, pack, quantize_values)
+
+
+def dequant_matmul_ref(x: jax.Array, qw: jax.Array, scale: jax.Array, *,
+                       bits: int, group_size: int, k: int) -> jax.Array:
+    qt = QuantizedTensor(qw, scale, bits, group_size, (k, qw.shape[1]))
+    w = dequantize(qt, jnp.float32)
+    return jnp.dot(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32)
+
+
+def channel_stats_ref(x: jax.Array):
+    xf = x.astype(jnp.float32)
+    return jnp.mean(xf, axis=0), jnp.var(xf, axis=0)
+
+
+def quantize_pack_ref(w: jax.Array, scale: jax.Array, *, bits: int) -> jax.Array:
+    q = quantize_values(w.astype(jnp.float32), scale.astype(jnp.float32), bits)
+    return pack(q, bits)

@@ -1,0 +1,359 @@
+"""Multi-pod dry-run: AOT lower + compile every (arch × shape × mesh) cell.
+
+For each cell:
+  * builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  * derives params as ShapeDtypeStructs (jax.eval_shape — no allocation),
+  * attaches NamedShardings from the partitioning rules,
+  * lowers + compiles the train/prefill/decode step,
+  * records memory_analysis, cost_analysis and parsed collective bytes
+    (JSON, one file per cell) for EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k --mesh single --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+from __future__ import annotations
+
+import os
+
+# MUST precede any jax import/init: the dry-run needs 512 placeholder host
+# devices so jax.make_mesh can build the production mesh. Never set globally.
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.core.quant.deploy import quantize_params_for_serving
+from repro.distributed.partitioning import rules_for_config, shard_struct
+from repro.distributed.sharding import named_sharding, sharding_ctx, spec_for
+from repro.launch.mesh import chips_in_mesh, make_production_mesh
+from repro.launch.roofline import (collective_bytes, model_flops, roofline)
+from repro.launch.shapes import (SHAPES, WHISPER_ENC_LEN, input_specs,
+                                 skip_reason)
+from repro.models.config import ModelConfig
+from repro.models.encdec import (encdec_decode, encdec_init_cache,
+                                 encdec_loss, encdec_prefill, init_encdec)
+from repro.models.transformer import init_cache, init_lm, lm_decode, lm_prefill
+from repro.optim.schedules import constant
+from repro.train.train_step import init_opt_state, make_train_step
+from repro.utils.tree import tree_map_with_path
+
+
+def dry_cfg(cfg: ModelConfig, kind: str) -> ModelConfig:
+    """Dry-run numerics: bf16 everywhere, remat on for training."""
+    cfg = cfg.replace(dtype="bfloat16", param_dtype="bfloat16",
+                      remat=(kind == "train"))
+    return cfg
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree,
+        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def _attach(mesh, tree, names_fn):
+    """Attach shardings to an SDS tree via names_fn(path, leaf)->names."""
+    def fn(path, leaf):
+        if not hasattr(leaf, "shape"):
+            return leaf
+        names = names_fn(path, leaf)
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype,
+            sharding=named_sharding(leaf.shape, names, mesh=mesh))
+    return tree_map_with_path(fn, tree)
+
+
+def _cache_names(path: str, leaf) -> tuple:
+    nd = leaf.ndim
+    key = path.split("/")[-1]
+    lead = (None,) * max(0, nd - {"k": 4, "v": 4, "pos": 2, "len": 1,
+                                  "state": 4, "conv": 3, "k_scale": 3,
+                                  "v_scale": 3}.get(key, nd))
+    if key in ("k_scale", "v_scale"):
+        return lead + ("batch", "cache_seq", None)
+    if key in ("k", "v"):
+        kvh = leaf.shape[-2]
+        seq_ax = "cache_seq" if kvh % 16 != 0 or kvh == 1 else None
+        head_ax = "kv_heads" if kvh % 16 == 0 else None
+        return lead + ("batch", seq_ax, head_ax, None)
+    if key == "pos":
+        return lead + ("batch", None)
+    if key == "len":
+        return lead + ("batch",)
+    if key == "state":
+        return lead + ("batch", "ssm_heads", None, None)
+    if key == "conv":
+        return lead + ("batch", None, None)
+    return (None,) * nd
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh, variant=None):
+    """Returns (fn, example_args: SDS-with-shardings tuple).
+
+    `variant` (perf hillclimbing): {"cfg": {field: value}, "rules": {...},
+    "donate_cache": bool, "grad_compress_bits": int}."""
+    variant = variant or {}
+    shape = SHAPES[shape_name]
+    cfg = dry_cfg(cfg, shape.kind)
+    if variant.get("cfg"):
+        cfg = cfg.replace(**variant["cfg"])
+    rules = rules_for_config(cfg, mesh)
+    rules["cache_seq"] = "model"
+    rules.update(variant.get("rules", {}))
+    key = jax.random.PRNGKey(0)
+
+    init_fn = init_encdec if cfg.enc_dec else init_lm
+    params_shape = jax.eval_shape(lambda: init_fn(cfg, key))
+    specs = input_specs(cfg, shape)
+
+    def batch_names(path, leaf):
+        base = path.split("/")[-1]
+        if base in ("tokens", "labels", "positions"):
+            return ("batch",) + (None,) * (leaf.ndim - 1)
+        if base in ("frames", "ext_embeds"):
+            return ("batch", None, None)
+        return (None,) * leaf.ndim
+
+    with sharding_ctx(mesh, rules):
+        if shape.kind == "train":
+            loss_fn = encdec_loss if cfg.enc_dec else None
+            step = make_train_step(
+                cfg, lr_schedule=constant(1e-4), clip_norm=1.0,
+                loss_fn=loss_fn, donate=False,
+                grad_compress_bits=variant.get("grad_compress_bits", 0))
+            gcb = variant.get("grad_compress_bits", 0)
+            opt_shape = jax.eval_shape(
+                lambda p: init_opt_state(cfg, p, grad_compress_bits=gcb),
+                params_shape)
+            p_sds = shard_struct(mesh, cfg, params_shape)
+            o_sds = {"adam": {"m": shard_struct(mesh, cfg,
+                                                opt_shape["adam"]["m"]),
+                              "v": shard_struct(mesh, cfg,
+                                                opt_shape["adam"]["v"]),
+                              "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+            if gcb:
+                o_sds["ef"] = shard_struct(mesh, cfg, opt_shape["ef"])
+            b_sds = _attach(mesh, specs, batch_names)
+            args = (p_sds, o_sds, b_sds,
+                    jax.ShapeDtypeStruct((), jnp.int32),
+                    jax.ShapeDtypeStruct((2,), jnp.uint32))
+            return step, args, cfg
+
+        # serving: maybe quantized weights
+        qparams_shape = jax.eval_shape(
+            lambda p: quantize_params_for_serving(cfg, p), params_shape)
+        p_sds = shard_struct(mesh, cfg, qparams_shape)
+
+        if shape.kind == "prefill":
+            if cfg.enc_dec:
+                cache_shape = jax.eval_shape(lambda: encdec_init_cache(
+                    cfg, shape.global_batch, shape.seq_len, WHISPER_ENC_LEN))
+
+                def fn(params, frames, tokens, cache):
+                    return encdec_prefill(cfg, params, frames, tokens, cache)
+
+                c_sds = _attach(mesh, _sds(cache_shape), _cache_names)
+                b = _attach(mesh, specs, batch_names)
+                return fn, (p_sds, b["frames"], b["tokens"], c_sds), cfg
+
+            cache_shape = jax.eval_shape(lambda: init_cache(
+                cfg, shape.global_batch, shape.seq_len))
+
+            if cfg.frontend == "vision":
+                def fn(params, tokens, ext, cache):
+                    return lm_prefill(cfg, params, tokens, cache,
+                                      ext_embeds=ext)
+
+                c_sds = _attach(mesh, _sds(cache_shape), _cache_names)
+                b = _attach(mesh, specs, batch_names)
+                return fn, (p_sds, b["tokens"], b["ext_embeds"], c_sds), cfg
+
+            def fn(params, tokens, cache):
+                return lm_prefill(cfg, params, tokens, cache)
+
+            c_sds = _attach(mesh, _sds(cache_shape), _cache_names)
+            b = _attach(mesh, specs, batch_names)
+            return fn, (p_sds, b["tokens"], c_sds), cfg
+
+        # decode
+        if cfg.enc_dec:
+            cache_shape = jax.eval_shape(lambda: encdec_init_cache(
+                cfg, shape.global_batch, shape.seq_len, WHISPER_ENC_LEN))
+
+            def fn(params, tokens, cache, positions):
+                return encdec_decode(cfg, params, tokens, cache, positions)
+        else:
+            cache_shape = jax.eval_shape(lambda: init_cache(
+                cfg, shape.global_batch, shape.seq_len))
+
+            def fn(params, tokens, cache, positions):
+                return lm_decode(cfg, params, tokens, cache, positions)
+
+        c_sds = _attach(mesh, _sds(cache_shape), _cache_names)
+        b = _attach(mesh, specs, batch_names)
+        return fn, (p_sds, b["tokens"], c_sds, b["positions"]), cfg
+
+
+def _compile_cell(cfg0, shape_name, mesh, n_repeats=None, scan_off=False,
+                  variant=None):
+    variant = variant or {}
+    cfg_in = cfg0 if n_repeats is None else cfg0.replace(n_repeats=n_repeats)
+    if scan_off:
+        # unrolled: every layer appears in HLO, so cost_analysis is exact
+        # (scan bodies are counted once regardless of trip count)
+        cfg_in = cfg_in.replace(scan_layers=False)
+    fn, args, cfg = build_cell(cfg_in, shape_name, mesh, variant)
+    rules = rules_for_config(cfg, mesh)
+    rules["cache_seq"] = "model"
+    rules.update(variant.get("rules", {}))
+    donate = ()
+    if variant.get("donate_cache") and SHAPES[shape_name].kind != "train":
+        # cache is the last-but-one positional arg for decode, last for prefill
+        donate = (len(args) - 2,) if SHAPES[shape_name].kind == "decode" \
+            else (len(args) - 1,)
+    with sharding_ctx(mesh, rules):
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    return cfg, mem, cost, collective_bytes(hlo)
+
+
+def _extrapolate(v1, v2, r1, r2, r):
+    """Linear in repeats: XLA's cost_analysis counts a scan body once, so we
+    compile at two reduced depths and extrapolate to the real depth."""
+    if v1 is None or v2 is None:
+        return None
+    slope = (v2 - v1) / (r2 - r1)
+    return v1 + slope * (r - r1)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             compile_only: bool = False, variant=None,
+             variant_name: str = "") -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    cfg0 = get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg0, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if variant_name:
+        rec["variant"] = variant_name
+    if reason:
+        rec.update({"status": "skipped", "reason": reason})
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        # full-depth compile: the dry-run proof + true memory analysis
+        cfg, mem, cost_full, coll_full = _compile_cell(
+            cfg0, shape_name, mesh, variant=variant)
+        t_compile = time.time() - t0
+        # reduced-depth *unrolled* compiles (R=1, R=2): per-layer costs are
+        # exact there; extrapolate linearly to the real depth
+        r = cfg0.n_repeats
+        _, _, cost1, coll1 = _compile_cell(cfg0, shape_name, mesh, 1,
+                                           scan_off=True, variant=variant)
+        _, _, cost2, coll2 = _compile_cell(cfg0, shape_name, mesh, 2,
+                                           scan_off=True, variant=variant)
+        cost = {k: _extrapolate(cost1.get(k), cost2.get(k), 1, 2, r)
+                for k in ("flops", "bytes accessed", "transcendentals")}
+        coll = {k: _extrapolate(coll1.get(k, 0), coll2.get(k, 0), 1, 2, r)
+                for k in coll1 if k != "counts"}
+        coll["counts"] = coll_full["counts"]
+        t_lower = 0.0
+        chips = chips_in_mesh(mesh)
+        init_fn = init_encdec if cfg.enc_dec else init_lm
+        params_shape = jax.eval_shape(
+            lambda: init_fn(cfg, jax.random.PRNGKey(0)))
+        mf = model_flops(cfg, params_shape, shape)
+        terms = roofline(cost, coll, chips=chips, model_flops_total=mf)
+        rec.update({
+            "status": "ok",
+            "compile_s": round(t_compile, 1),
+            "chips": chips,
+            "cost_uncorrected": {k: cost_full.get(k) for k in
+                                 ("flops", "bytes accessed")},
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            },
+            "cost": {k: cost.get(k) for k in
+                     ("flops", "bytes accessed", "transcendentals")},
+            "collectives": {k: v for k, v in coll.items() if k != "counts"},
+            "collective_counts": coll["counts"],
+            "model_flops_total": mf,
+            "roofline": {
+                "compute_s": terms.compute_s,
+                "memory_s": terms.memory_s,
+                "collective_s": terms.collective_s,
+                "dominant": terms.dominant,
+                "useful_flops_ratio": terms.useful_flops_ratio,
+                "roofline_fraction": terms.roofline_fraction,
+            },
+        })
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    rec["wall_s"] = round(time.time() - t0, 1)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        vtag = f"__{variant_name}" if variant_name else ""
+        fname = f"{arch}__{shape_name}__{mesh_name}{vtag}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "multi" if mp else "single"
+                fname = os.path.join(args.out,
+                                     f"{arch}__{shape}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(fname):
+                    print(f"[skip existing] {arch} {shape} {mesh_name}")
+                    continue
+                rec = run_cell(arch, shape, mp, args.out)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f"dom={r['dominant']} "
+                             f"frac={r['roofline_fraction']:.3f} "
+                             f"compile={rec['compile_s']}s")
+                elif status == "error":
+                    extra = rec["error"][:120]
+                print(f"[{status}] {arch} {shape} {mesh_name} {extra}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

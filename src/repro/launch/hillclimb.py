@@ -1,0 +1,98 @@
+"""Perf hillclimbing driver: re-lower a cell with a named variant and diff
+the roofline terms against the baseline.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --cell \
+        chatglm3-6b:decode_32k --variant chunked_decode
+
+Variants encode the hypothesis log in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import json
+
+# named variants: {"cfg": {...}, "rules": {...}, "donate_cache", ...}
+VARIANTS = {
+    "base_fixed": {},
+    # --- decode (serving) ---
+    "donate_cache": {"donate_cache": True},
+    "kv_int8": {"cfg": {"kv_cache_bits": 8}, "donate_cache": True},
+    "chunked_decode": {"cfg": {"chunked_decode": True, "attn_block_kv": 2048},
+                       "donate_cache": True},
+    "chunked_decode_512": {"cfg": {"chunked_decode": True,
+                                   "attn_block_kv": 512},
+                           "donate_cache": True},
+    # --- train memory ---
+    "blockkv_2048": {"cfg": {"attn_block_kv": 2048}},
+    "blockkv_4096": {"cfg": {"attn_block_kv": 4096}},
+    "remat_dots": {"cfg": {"remat_policy": "dots"}},
+    "blockkv2048_rematdots": {"cfg": {"attn_block_kv": 2048,
+                                      "remat_policy": "dots"}},
+    "blockkv4096_rematdots": {"cfg": {"attn_block_kv": 4096,
+                                      "remat_policy": "dots"}},
+    # --- collectives ---
+    "fsdp": {"cfg": {"fsdp": True}},
+    "fsdp_gc8": {"cfg": {"fsdp": True}, "grad_compress_bits": 8},
+    "gc8": {"grad_compress_bits": 8},
+    "expert_tp": {"rules": {"expert": None, "expert_ff": "model",
+                            "capacity": "model"}},
+    "moe_shardmap": {"cfg": {"moe_impl": "shard_map"}},
+    "moe_shardmap_fsdp": {"cfg": {"moe_impl": "shard_map", "fsdp": True}},
+    "fsdp_expert_tp": {"cfg": {"fsdp": True},
+                       "rules": {"expert": None, "expert_ff": "model",
+                                 "capacity": "model"}},
+    # context-parallel decode: replicate the (tiny) q heads, keep the KV
+    # cache seq-sharded end-to-end -> no per-layer cache all-gather
+    "ctx_parallel_decode": {"rules": {"heads": None, "kv_heads": None,
+                                      "cache_seq": "model"}},
+    "bf16_scores": {"cfg": {"attn_scores_dtype": "bfloat16"}},
+    "bf16_scores_rematdots": {"cfg": {"attn_scores_dtype": "bfloat16",
+                                      "remat_policy": "dots"}},
+    # --- SWA ---
+    "banded_swa": {"cfg": {"banded_window_attn": True}},
+    "banded_blockkv": {"cfg": {"banded_window_attn": True,
+                               "attn_block_kv": 2048}},
+}
+
+
+def main():
+    from repro.launch.dryrun import run_cell
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variant", required=True,
+                    help=f"one of {list(VARIANTS)} or k=v cfg overrides")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+
+    arch, shape = args.cell.split(":")
+    variant = VARIANTS[args.variant]
+    rec = run_cell(arch, shape, args.mesh == "multi", args.out,
+                   variant=variant, variant_name=args.variant)
+    base_path = f"results/dryrun/{arch}__{shape}__{args.mesh}.json"
+    if rec["status"] == "ok" and os.path.exists(base_path):
+        base = json.load(open(base_path))
+        br, vr = base["roofline"], rec["roofline"]
+        print(f"{arch} {shape} [{args.variant}] vs baseline:")
+        for k in ("compute_s", "memory_s", "collective_s"):
+            b, v = br[k], vr[k]
+            delta = (v - b) / b * 100 if b else 0.0
+            print(f"  {k:13s} {b:10.4f} -> {v:10.4f}  ({delta:+.1f}%)")
+        print(f"  dominant      {br['dominant']} -> {vr['dominant']}")
+        print(f"  frac          {br['roofline_fraction']:.4f} -> "
+              f"{vr['roofline_fraction']:.4f}")
+        pb = base["memory"].get("peak_bytes") or 0
+        pv = rec["memory"].get("peak_bytes") or 0
+        print(f"  peak HBM      {pb / 2 ** 30:.2f}GB -> {pv / 2 ** 30:.2f}GB")
+    else:
+        print(json.dumps(rec, indent=2)[:2000])
+
+
+if __name__ == "__main__":
+    main()

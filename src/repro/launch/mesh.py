@@ -1,0 +1,26 @@
+"""Production mesh builders (TPU v5e 16x16 pods; 2 pods multi-pod).
+
+Functions, not module constants — importing this module never touches jax
+device state (required: smoke tests must see 1 device, the dry-run 512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_from_plan(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Elastic path: build whatever mesh launch/elastic.py planned."""
+    return jax.make_mesh(shape, axes)
+
+
+def chips_in_mesh(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

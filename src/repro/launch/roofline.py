@@ -1,0 +1,180 @@
+"""Roofline analysis from compiled AOT artifacts (no hardware needed).
+
+Sources:
+  * compiled.cost_analysis() -> per-device HLO FLOPs + bytes accessed
+    (the compiled module is the post-SPMD per-device program);
+  * compiled.as_text()       -> optimized HLO; collective ops are parsed and
+    their wire bytes summed per semantics below.
+
+TPU v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Wire bytes per collective kind (operand-size convention):
+    all-reduce/all-to-all/permute: result size; all-gather: result/G;
+    reduce-scatter: result*G."""
+    out = {k: 0 for k in _COLL_KINDS}
+    counts = {k: 0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.*)$", stripped)
+        if m is None:
+            continue
+        rhs = m.group(1)
+        kind = None
+        for k in _COLL_KINDS:
+            # result type(s) then " kind(" — exclude -done/-start suffix dups
+            km = re.search(r"\s" + k + r"(-start)?\(", rhs)
+            if km:
+                kind = k
+                lhs_types = rhs[:km.start()]
+                break
+        if kind is None:
+            continue
+        size = _shape_bytes(lhs_types)
+        g = _group_size(line)
+        if kind == "all-gather":
+            size = size // max(g, 1)
+        elif kind == "reduce-scatter":
+            size = size * max(g, 1)
+        out[kind] += size
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in _COLL_KINDS)
+    out["counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops_total: Optional[float] = None
+    useful_flops_ratio: Optional[float] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the binding roofline that useful model FLOPs achieve:
+        (model_flops/chips/peak) / max(term)."""
+        if not self.model_flops_total or self.step_time_s <= 0:
+            return 0.0
+        ideal = self.model_flops_total_per_device / PEAK_FLOPS
+        return ideal / self.step_time_s
+
+    @property
+    def model_flops_total_per_device(self):
+        return (self.model_flops_total or 0.0) / max(self._chips, 1)
+
+    _chips: int = 1
+
+
+def roofline(cost: dict, coll: dict, *, chips: int,
+             model_flops_total: Optional[float] = None) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cb = float(coll.get("total", 0))
+    t = RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=cb / ICI_BW,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        coll_bytes_per_device=cb,
+        model_flops_total=model_flops_total,
+    )
+    t._chips = chips
+    if model_flops_total and flops > 0:
+        t.useful_flops_ratio = (model_flops_total / chips) / flops
+    return t
+
+
+def count_params(params_shape, *, exclude=("embed", "pos")) -> int:
+    """Total param count from an eval_shape tree, excluding embeddings."""
+    import jax
+
+    from repro.utils.tree import tree_map_with_path
+    total = [0]
+
+    def fn(path, leaf):
+        if hasattr(leaf, "size") and not any(e in path for e in exclude):
+            total[0] += int(leaf.size)
+        return leaf
+
+    tree_map_with_path(fn, params_shape)
+    return total[0]
+
+
+def model_flops(cfg, params_shape, shape_spec) -> float:
+    """6·N_active·D (train) or 2·N_active·D (inference) global FLOPs."""
+    n_total = count_params(params_shape)
+    n_active = n_total
+    if cfg.moe is not None:
+        # routed experts: only top_k/E of expert params are active per token
+        e, k = cfg.moe.n_experts, cfg.moe.top_k
+        expert_params = 0
+        n_moe_layers = sum(1 for s in cfg.all_layer_specs() if s.mlp == "moe")
+        expert_params = n_moe_layers * e * 3 * cfg.d_model * cfg.moe.d_ff_expert
+        n_active = n_total - expert_params + expert_params * k / e
+    if shape_spec.kind == "train":
+        tokens = shape_spec.global_batch * shape_spec.seq_len
+        return 6.0 * n_active * tokens
+    if shape_spec.kind == "prefill":
+        tokens = shape_spec.global_batch * shape_spec.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape_spec.global_batch  # decode: 1 token/seq

@@ -1,0 +1,91 @@
+"""Assigned input-shape sets and ShapeDtypeStruct builders per (arch, shape).
+
+  train_4k    : seq 4096,   global batch 256  -> train_step
+  prefill_32k : seq 32768,  global batch 32   -> serve prefill
+  decode_32k  : 1 new token, KV cache 32768, batch 128 -> serve decode
+  long_500k   : 1 new token, context 524288, batch 1   -> serve decode
+                (sub-quadratic archs only: mamba2 / jamba / mixtral-SWA)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# archs with sub-quadratic attention/state for the 500k cell
+LONG_OK_FAMILIES = {"ssm", "hybrid"}
+
+
+def long_ok(cfg: ModelConfig) -> bool:
+    return cfg.family in LONG_OK_FAMILIES or cfg.attn_window is not None
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> str | None:
+    if shape.name == "long_500k" and not long_ok(cfg):
+        return ("full-attention arch: 500k decode requires sub-quadratic "
+                "attention (noted in DESIGN.md)")
+    return None
+
+
+WHISPER_ENC_LEN = 1500  # whisper's native encoder length (30s audio)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+    Shardings are attached later by the dry-run (they depend on the mesh)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    if cfg.enc_dec:  # whisper: frame embeddings + decoder tokens
+        if shape.kind == "train":
+            return {"frames": jax.ShapeDtypeStruct(
+                        (b, WHISPER_ENC_LEN, cfg.d_model), cfg.adtype),
+                    "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if shape.kind == "prefill":
+            return {"frames": jax.ShapeDtypeStruct(
+                        (b, WHISPER_ENC_LEN, cfg.d_model), cfg.adtype),
+                    "tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                "positions": jax.ShapeDtypeStruct((b, 1), i32)}
+
+    if cfg.frontend == "vision":  # VLM: patch embeds prepended
+        f = cfg.frontend_len
+        if shape.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((b, s - f), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s - f), i32),
+                    "ext_embeds": jax.ShapeDtypeStruct(
+                        (b, f, cfg.d_model), cfg.adtype)}
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((b, s - f), i32),
+                    "ext_embeds": jax.ShapeDtypeStruct(
+                        (b, f, cfg.d_model), cfg.adtype)}
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                "positions": jax.ShapeDtypeStruct((b, 1), i32)}
+
+    if shape.kind == "train":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32)}
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "positions": jax.ShapeDtypeStruct((b, 1), i32)}

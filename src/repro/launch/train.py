@@ -1,0 +1,97 @@
+"""Distributed training launcher.
+
+On a real TPU pod this runs under `jax.distributed.initialize()` with the
+production mesh; on CPU it runs the same code on a 1-device mesh. The loop
+is the fault-tolerant Trainer (checkpoint/resume, straggler detection,
+elastic remesh policy).
+
+    PYTHONPATH=src python -m repro.launch.train --arch tiny --steps 200 \
+        --batch 16 --seq 64 --ckpt-dir /tmp/repro_run
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import heldout_split, make_corpus
+from repro.distributed.partitioning import param_shardings, rules_for_config
+from repro.distributed.sharding import sharding_ctx
+from repro.launch.elastic import ElasticCoordinator
+from repro.launch.mesh import chips_in_mesh
+from repro.models.transformer import init_lm
+from repro.optim.schedules import warmup_cosine
+from repro.train.evaluate import perplexity
+from repro.train.train_step import init_opt_state, make_train_step
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny",
+                    choices=["tiny"] + list_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config of --arch")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compress-bits", type=int, default=0)
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="build the 2x16x16 mesh (needs 512 devices)")
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch))
+    n_dev = len(jax.devices())
+    if args.multi_pod or n_dev >= 256:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+    print(f"mesh: {dict(mesh.shape)} ({chips_in_mesh(mesh)} chips)")
+    coord = ElasticCoordinator(chips_in_mesh(mesh))
+
+    corpus, _ = make_corpus(cfg.vocab_size, 200_000, seed=0)
+    train_toks, held = heldout_split(corpus)
+    pipe = DataPipeline(train_toks, batch_size=args.batch, seq_len=args.seq,
+                        seed=0)
+    rules = rules_for_config(cfg, mesh)
+
+    with sharding_ctx(mesh, rules):
+        params = init_lm(cfg, jax.random.PRNGKey(0))
+        if chips_in_mesh(mesh) > 1:
+            shardings = param_shardings(mesh, cfg, params)
+            params = jax.device_put(params, shardings)
+        step_fn = make_train_step(
+            cfg, lr_schedule=warmup_cosine(args.lr, 20, args.steps),
+            grad_compress_bits=args.grad_compress_bits)
+        opt = init_opt_state(cfg, params,
+                             grad_compress_bits=args.grad_compress_bits)
+        ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+
+        def on_straggler(step, dt):
+            plan = coord.straggler(step, dt)
+            if plan:
+                print(f"!! evicting slow host: remesh plan {plan.shape}, "
+                      f"grad-accum x{plan.accum_steps}")
+
+        trainer = Trainer(cfg, params, opt, step_fn, pipe, ckpt,
+                          on_straggler=on_straggler)
+        start = trainer.maybe_resume()
+        if start:
+            print(f"resumed at step {start}")
+        result = trainer.run(args.steps, ckpt_every=args.ckpt_every)
+        print(f"done: {result}")
+        print("heldout:", perplexity(cfg, trainer.params, held,
+                                     seq_len=args.seq))
+
+
+if __name__ == "__main__":
+    main()

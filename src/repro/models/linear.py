@@ -1,0 +1,94 @@
+"""Single entry point for every linear layer in the zoo.
+
+A linear's params are {"w": W} or {"w": W, "b": b}. W may be a plain array
+(K, N) / stacked experts (E, K, N), or a packed `QuantizedTensor` — the
+paper's deployment format. Dispatch:
+
+  * plain array          -> jnp.einsum (MXU)
+  * QuantizedTensor, TPU -> Pallas fused dequant-matmul kernel
+  * QuantizedTensor, CPU -> reference dequant + einsum (same math)
+
+`act_bits` on the QuantizedTensor fake-quants the activation first
+(SmoothQuant W_xA8 mode).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant.types import QuantizedTensor, dequantize, fake_quant_activation
+
+
+def _use_pallas() -> bool:
+    force = os.environ.get("REPRO_DEQUANT_IMPL", "")
+    if force == "pallas":
+        return True
+    if force == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def materialize(w: Any, dtype) -> jax.Array:
+    if isinstance(w, QuantizedTensor):
+        return dequantize(w, dtype)
+    return w.astype(dtype)
+
+
+def dense(p: dict, x: jax.Array, *, dtype=None) -> jax.Array:
+    """y = x @ w (+ b). x: (..., K). Handles quantized + biased linears."""
+    w = p["w"]
+    dtype = dtype or x.dtype
+    if isinstance(w, QuantizedTensor):
+        if w.act_bits:
+            x = fake_quant_activation(x, w.act_bits)
+        if _use_pallas() and w.qw.ndim == 2 and w.bits in (2, 4, 8):
+            from repro.kernels import ops as kops
+
+            lead = x.shape[:-1]
+            y2 = kops.dequant_matmul(x.reshape(-1, x.shape[-1]), w, out_dtype=dtype)
+            y = y2.reshape(*lead, w.n)
+        else:
+            wm = dequantize(w, dtype)
+            y = jnp.einsum("...k,kn->...n", x, wm,
+                           preferred_element_type=jnp.float32).astype(dtype)
+    else:
+        y = jnp.einsum("...k,kn->...n", x.astype(dtype), w.astype(dtype),
+                       preferred_element_type=jnp.float32).astype(dtype)
+    if "b" in p and p["b"] is not None:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def dense_experts(p: dict, x: jax.Array, *, dtype=None) -> jax.Array:
+    """Batched expert matmul: x (E, C, K) @ w (E, K, N) -> (E, C, N)."""
+    w = p["w"]
+    dtype = dtype or x.dtype
+    if isinstance(w, QuantizedTensor):
+        if w.act_bits:
+            x = fake_quant_activation(x, w.act_bits)
+        wm = dequantize(w, dtype)
+    else:
+        wm = w.astype(dtype)
+    y = jnp.einsum("eck,ekn->ecn", x.astype(dtype), wm,
+                   preferred_element_type=jnp.float32).astype(dtype)
+    if "b" in p and p["b"] is not None:
+        y = y + p["b"][:, None, :].astype(dtype)
+    return y
+
+
+def init_dense(key, k: int, n: int, *, bias: bool = False, dtype=jnp.float32,
+               scale: float | None = None) -> dict:
+    std = scale if scale is not None else (1.0 / (k ** 0.5))
+    p = {"w": (jax.random.normal(key, (k, n)) * std).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((n,), dtype)
+    return p
+
+
+def init_dense_experts(key, e: int, k: int, n: int, *, dtype=jnp.float32,
+                       scale: float | None = None) -> dict:
+    std = scale if scale is not None else (1.0 / (k ** 0.5))
+    return {"w": (jax.random.normal(key, (e, k, n)) * std).astype(dtype)}

@@ -1,0 +1,199 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-parallel + recurrent decode.
+
+Training/prefill run the chunk-parallel SSD form (arXiv:2405.21060 §6):
+intra-chunk quadratic term + inter-chunk state recurrence via `lax.scan`.
+Decode is the O(1) recurrence over the (H, P, N) state.
+
+Params per layer: in_proj -> [z (di), xBC (di + 2*G*N), dt (H)], depthwise
+causal conv over xBC, A_log/D/dt_bias per head, gated RMSNorm, out_proj.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lc
+from repro.models.config import ModelConfig
+from repro.models.linear import dense, init_dense
+from repro.models.norms import apply_gated_rmsnorm
+
+def _dims(cfg: ModelConfig):
+    m = cfg.mamba
+    di = m.d_inner(cfg.d_model)
+    h = m.n_heads(cfg.d_model)
+    conv_dim = di + 2 * m.n_groups * m.d_state
+    return m, di, h, conv_dim
+
+
+def init_mamba(cfg: ModelConfig, key) -> dict:
+    m, di, h, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * m.n_groups * m.d_state + h
+    p = {
+        "in_proj": init_dense(ks[0], cfg.d_model, d_in_proj, dtype=cfg.pdtype),
+        "conv_w": (jax.random.normal(ks[1], (m.d_conv, conv_dim)) * 0.1
+                   ).astype(cfg.pdtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.pdtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gnorm": {"scale": jnp.ones((di,), cfg.pdtype)},
+        "out_proj": init_dense(ks[2], di, cfg.d_model, dtype=cfg.pdtype),
+    }
+    return p
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int) -> dict:
+    m, di, h, conv_dim = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, h, m.head_dim, m.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, m.d_conv - 1, conv_dim), cfg.adtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    m, di, h, conv_dim = _dims(cfg)
+    gn = m.n_groups * m.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + di + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(cfg, p, xbc, conv_state=None):
+    """Depthwise causal conv1d over (B, L, C). Returns (y, new_conv_state)."""
+    m = cfg.mamba
+    w = p["conv_w"].astype(jnp.float32)                         # (K, C)
+    kk = m.d_conv
+    xf = xbc.astype(jnp.float32)
+    if conv_state is not None:
+        xf = jnp.concatenate([conv_state.astype(jnp.float32), xf], axis=1)
+    else:
+        xf = jnp.pad(xf, ((0, 0), (kk - 1, 0), (0, 0)))
+    # y[t] = sum_k w[k] * x[t + k]  over the padded sequence
+    y = sum(xf[:, i:i + xbc.shape[1], :] * w[i] for i in range(kk))
+    y = y + p["conv_b"].astype(jnp.float32)
+    new_state = xf[:, -(kk - 1):, :].astype(xbc.dtype) if kk > 1 else None
+    return jax.nn.silu(y).astype(xbc.dtype), new_state
+
+
+def _ssd_chunked(cfg, x, dt, a, bm, cm):
+    """Chunk-parallel SSD.
+
+    x: (B,L,H,P) head inputs; dt: (B,L,H) post-softplus; a: (H,) negative;
+    bm, cm: (B,L,G,N). Returns (y: (B,L,H,P), final_state: (B,H,P,N)).
+    """
+    m = cfg.mamba
+    b, l0, h, pdim = x.shape
+    g, n = bm.shape[2], bm.shape[3]
+    q = min(m.chunk, l0)
+    pad = (-l0) % q
+    if pad:  # zero-pad: dt=0 -> decay 1, x=0 -> no state contribution
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    l = l0 + pad
+    nc = l // q
+    rep = h // g
+
+    # reshape into chunks
+    xc = x.reshape(b, nc, q, h, pdim).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    bc = jnp.repeat(bm.reshape(b, nc, q, g, n), rep, axis=3).astype(jnp.float32)
+    cc = jnp.repeat(cm.reshape(b, nc, q, g, n), rep, axis=3).astype(jnp.float32)
+
+    da = dtc * a[None, None, None, :]                            # (B,nc,Q,H)
+    cs = jnp.cumsum(da, axis=2)                                  # within-chunk cumsum
+    xdt = xc * dtc[..., None]                                    # (B,nc,Q,H,P)
+
+    # intra-chunk (diagonal blocks): att[q,t] = exp(cs_q - cs_t), t <= q
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]            # (B,nc,Q,T,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    seg = jnp.where(tri[None, None, :, :, None], seg, -jnp.inf)
+    att = jnp.exp(seg) * jnp.einsum("bcqhn,bcthn->bcqth", cc, bc)
+    y_diag = jnp.einsum("bcqth,bcthp->bcqhp", att, xdt)
+
+    # per-chunk end states: S_c = sum_t exp(cs_last - cs_t) * B_t x_t dt_t
+    decay = jnp.exp(cs[:, :, -1:, :] - cs)                       # (B,nc,Q,H)
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", decay, bc, xdt)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                       # (B,nc,H)
+
+    def body(s_prev, xs):
+        st, dec = xs                                             # (B,H,P,N), (B,H)
+        s_before = s_prev
+        s_next = s_prev * dec[:, :, None, None] + st
+        return s_next, s_before
+
+    final, s_befores = jax.lax.scan(
+        body, jnp.zeros((b, h, pdim, n), jnp.float32),
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    s_befores = s_befores.swapaxes(0, 1)                         # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y_off[q] = exp(cs_q) * C_q . S_before
+    y_off = jnp.einsum("bcqh,bcqhn,bchpn->bcqhp",
+                       jnp.exp(cs), cc, s_befores)
+    y = (y_diag + y_off).reshape(b, l, h, pdim)[:, :l0]
+    return y.astype(x.dtype), final
+
+
+def apply_mamba(cfg: ModelConfig, p: dict, u: jax.Array, *,
+                cache: Optional[dict] = None, decode: bool = False,
+                taps: Optional[dict] = None, tap_prefix: str = ""):
+    """u: (B, L, d_model). Returns (y, new_cache)."""
+    m, di, h, conv_dim = _dims(cfg)
+    b, l, _ = u.shape
+    g, n, pdim = m.n_groups, m.d_state, m.head_dim
+
+    if taps is not None:
+        taps[tap_prefix + "in_proj"] = u
+
+    zxbcdt = dense(p["in_proj"], u)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    a = -jnp.exp(p["A_log"])                                     # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"][None, None, :])            # (B,L,H)
+
+    new_cache = dict(cache) if cache is not None else None
+    if decode:
+        assert cache is not None and l == 1
+        conv_state = cache["conv"]
+        xbc_f, _ = _causal_conv(cfg, p, xbc, conv_state)
+        new_cache["conv"] = jnp.concatenate(
+            [conv_state[:, 1:], xbc.astype(conv_state.dtype)], axis=1)
+        x, bm, cm = jnp.split(xbc_f, [di, di + g * n], axis=-1)
+        xh = x.reshape(b, h, pdim).astype(jnp.float32)
+        bmh = jnp.repeat(bm.reshape(b, g, n), h // g, axis=1)    # (B,H,N)
+        cmh = jnp.repeat(cm.reshape(b, g, n), h // g, axis=1)
+        dt1 = dt[:, 0, :]                                        # (B,H)
+        dec = jnp.exp(dt1 * a[None, :])                          # (B,H)
+        s = cache["state"] * dec[:, :, None, None] + \
+            jnp.einsum("bh,bhp,bhn->bhpn", dt1, xh, bmh)
+        y = jnp.einsum("bhpn,bhn->bhp", s, cmh)
+        y = y + p["D"][None, :, None] * xh
+        y = y.reshape(b, 1, di).astype(u.dtype)
+        new_cache["state"] = s
+        new_cache["len"] = cache["len"] + 1
+    else:
+        conv_state = cache["conv"] if cache is not None else None
+        xbc_f, conv_tail = _causal_conv(cfg, p, xbc, conv_state)
+        x, bm, cm = jnp.split(xbc_f, [di, di + g * n], axis=-1)
+        xh = lc(x.reshape(b, l, h, pdim), "batch", "seq", "ssm_heads", None)
+        bmg = bm.reshape(b, l, g, n)
+        cmg = cm.reshape(b, l, g, n)
+        y, final_state = _ssd_chunked(cfg, xh, dt, a, bmg, cmg)
+        y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(b, l, di).astype(u.dtype)
+        if new_cache is not None:
+            new_cache["state"] = final_state
+            new_cache["conv"] = conv_tail
+            new_cache["len"] = cache["len"] + l
+
+    y = apply_gated_rmsnorm(cfg, p["gnorm"], y, z)
+    y = lc(y, "batch", "seq", None)
+    if taps is not None:
+        taps[tap_prefix + "out_proj"] = y
+    return dense(p["out_proj"], y), new_cache

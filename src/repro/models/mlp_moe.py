@@ -1,0 +1,158 @@
+"""Dense MLP (SwiGLU / GELU) and capacity-based top-k MoE.
+
+MoE dispatch is the XLA-friendly scatter/gather formulation: tokens are
+scattered into a per-expert (E, C, d) buffer (C = capacity), experts run as
+one batched einsum (sharded over the `expert`/model axis -> expert
+parallelism), and results are gathered back with router gates. Overflowing
+tokens are dropped (tracked in aux stats), as in Switch/GShard.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import lc
+from repro.models.config import ModelConfig
+from repro.models.linear import dense, dense_experts, init_dense, init_dense_experts
+
+
+def init_mlp(cfg: ModelConfig, key, d_ff: int, d_in: int = 0) -> dict:
+    d = d_in or cfg.d_model
+    ks = jax.random.split(key, 3)
+    p = {"wi": init_dense(ks[0], d, d_ff, bias=cfg.mlp_bias, dtype=cfg.pdtype),
+         "wo": init_dense(ks[1], d_ff, d, bias=cfg.mlp_bias, dtype=cfg.pdtype)}
+    if cfg.act == "silu":
+        p["wg"] = init_dense(ks[2], d, d_ff, bias=cfg.mlp_bias, dtype=cfg.pdtype)
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p: dict, x: jax.Array,
+              taps: Optional[dict] = None, tap_prefix: str = "") -> jax.Array:
+    if taps is not None:
+        taps[tap_prefix + "wi"] = x
+        if "wg" in p:
+            taps[tap_prefix + "wg"] = x
+    if cfg.act == "silu":
+        h = jax.nn.silu(dense(p["wg"], x)) * dense(p["wi"], x)
+    else:
+        h = jax.nn.gelu(dense(p["wi"], x), approximate=True)
+    h = lc(h, "batch", "seq", "mlp")
+    if taps is not None:
+        taps[tap_prefix + "wo"] = h
+    return dense(p["wo"], h)
+
+
+# ------------------------------------------------------------------- MoE
+
+def init_moe(cfg: ModelConfig, key) -> dict:
+    m = cfg.moe
+    d, ff = cfg.d_model, m.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": init_dense(ks[0], d, m.n_experts, dtype=jnp.float32),
+        "experts": {
+            "wi": init_dense_experts(ks[1], m.n_experts, d, ff, dtype=cfg.pdtype),
+            "wg": init_dense_experts(ks[2], m.n_experts, d, ff, dtype=cfg.pdtype),
+            "wo": init_dense_experts(ks[3], m.n_experts, ff, d, dtype=cfg.pdtype),
+        },
+    }
+    if m.n_shared:
+        p["shared"] = init_mlp(cfg, ks[4], m.n_shared * ff)
+    return p
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(m.capacity_factor * n_tokens * m.top_k / m.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def apply_moe(cfg: ModelConfig, p: dict, x: jax.Array,
+              taps: Optional[dict] = None, tap_prefix: str = ""):
+    """x: (B, S, d). Returns (y, aux_loss_scalar)."""
+    m = cfg.moe
+    b, s, d = x.shape
+
+    if cfg.moe_impl == "shard_map" and taps is None:
+        from repro.core.quant.types import QuantizedTensor
+        from repro.distributed.sharding import active_mesh
+        mesh = active_mesh()
+        float_experts = not isinstance(p["experts"]["wi"]["w"],
+                                       QuantizedTensor)
+        if (mesh is not None and "model" in mesh.shape and float_experts
+                and m.n_experts % mesh.shape["model"] == 0):
+            dp = 1
+            for a in ("pod", "data"):
+                dp *= mesh.shape.get(a, 1)
+            if b % dp == 0 and (b // dp) * s % mesh.shape["model"] == 0:
+                from repro.models.moe_shardmap import moe_ep_shardmap
+                return moe_ep_shardmap(cfg, p, x, mesh)
+    t = b * s
+    e, k = m.n_experts, m.top_k
+    cap = moe_capacity(cfg, t)
+    xf = x.reshape(t, d)
+
+    if taps is not None:
+        taps[tap_prefix + "router"] = xf
+
+    logits = dense(p["router"], xf.astype(jnp.float32))          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                          # (T, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
+
+    # slot positions within each expert — sort-based (O(T·k) memory; the
+    # one-hot/cumsum formulation is O(T·k·E) and blows up at pod scale)
+    flat_idx = idx.reshape(t * k)
+    order = jnp.argsort(flat_idx, stable=True)
+    sorted_e = flat_idx[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    pos_sorted = jnp.arange(t * k, dtype=jnp.int32) - \
+        starts[sorted_e].astype(jnp.int32)
+    pos = jnp.zeros((t * k,), jnp.int32).at[order].set(pos_sorted)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    counts = jnp.zeros((e,), jnp.float32).at[flat_idx].add(1.0)
+    ce = counts / t
+    aux = m.router_aux_weight * e * jnp.sum(me * ce)
+
+    keep = pos < cap
+    safe_e = jnp.where(keep, flat_idx, e)                        # overflow -> bin E
+    safe_pos = jnp.where(keep, pos, 0)
+
+    # dispatch: (E+1, C, d) scatter (unique (e,pos) per slot -> add == set)
+    xk = jnp.repeat(xf[:, None, :], k, axis=1).reshape(t * k, d)
+    buf = jnp.zeros((e + 1, cap, d), x.dtype).at[safe_e, safe_pos].add(xk)
+    buf = lc(buf[:e], "expert", "capacity", "embed")
+
+    if taps is not None:
+        taps[tap_prefix + "experts"] = buf
+
+    h = jax.nn.silu(dense_experts(p["experts"]["wg"], buf)) * \
+        dense_experts(p["experts"]["wi"], buf)
+    h = lc(h, "expert", "capacity", "mlp")
+    if taps is not None:
+        taps[tap_prefix + "experts_out"] = h
+    out = dense_experts(p["experts"]["wo"], h)                   # (E, C, d)
+    out = lc(out, "expert", "capacity", "embed")
+
+    # combine
+    gathered = out[jnp.minimum(safe_e, e - 1), safe_pos]         # (T*k, d)
+    gathered = gathered * (keep[:, None] & (safe_e < e)[:, None])
+    gathered = gathered * gate.reshape(t * k, 1).astype(x.dtype)
+    y = jnp.sum(gathered.reshape(t, k, d), axis=1)
+
+    if "shared" in p:
+        if taps is not None:
+            sh_taps = {}
+            ysh = apply_mlp(cfg, p["shared"], x, sh_taps, "")
+            for kk, vv in sh_taps.items():
+                taps[tap_prefix + "shared/" + kk] = vv
+        else:
+            ysh = apply_mlp(cfg, p["shared"], x)
+        y = y.reshape(b, s, d) + ysh
+    else:
+        y = y.reshape(b, s, d)
+    return lc(y, "batch", "seq", "embed"), aux

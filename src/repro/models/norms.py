@@ -1,0 +1,53 @@
+"""RMSNorm / LayerNorm — the paper's tweakable parameters.
+
+Norm params live under keys starting with "ln" (or "gnorm" for Mamba2's
+gated RMSNorm, "qnorm"/"kvnorm" for MLA's low-rank norms) so the
+norm-tweaking pipeline can address exactly these leaves.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def init_norm(cfg: ModelConfig, d: int) -> dict:
+    p = {"scale": jnp.ones((d,), cfg.pdtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.pdtype)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def apply_gated_rmsnorm(cfg: ModelConfig, p: dict, x: jax.Array,
+                        z: jax.Array) -> jax.Array:
+    """Mamba2 gated norm: RMSNorm(x * silu(z)) * scale."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def is_norm_path(path: str) -> bool:
+    """True if this param path belongs to a tweakable normalization layer."""
+    parts = path.split("/")
+    return any(
+        seg.startswith("ln") or seg in ("gnorm", "qnorm", "kvnorm", "final_norm")
+        for seg in parts
+    )

@@ -1,0 +1,37 @@
+"""Rotary position embeddings: full (llama), half ("2d", ChatGLM) variants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0,
+               variant: str = "full") -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32. Rotate-half convention.
+
+    variant "full": rotate all head dims; "half": rotate only the first
+    hd//2 dims (ChatGLM's 2D RoPE applies rotary to half the channels);
+    "none": identity.
+    """
+    if variant == "none":
+        return x
+    hd = x.shape[-1]
+    rot = hd if variant == "full" else hd // 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs       # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]                            # (B, S, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = xr[..., :half].astype(jnp.float32), xr[..., half:].astype(jnp.float32)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    out = jnp.concatenate([rotated.astype(x.dtype), xp], axis=-1)
+    return out
+
+
+def sinusoidal_positions(seq_len: int, d_model: int, dtype=jnp.float32) -> jax.Array:
+    """Whisper-style fixed sinusoidal table (seq_len, d_model)."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = jnp.arange(seq_len)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)

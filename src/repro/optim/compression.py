@@ -1,0 +1,34 @@
+"""Gradient compression (distributed-optimization trick).
+
+int8/int4 symmetric per-leaf quantization with stochastic rounding and error
+feedback (residual accumulation): the compressed representation is what a
+bandwidth-limited DP all-reduce would carry; error feedback keeps SGD/Adam
+convergence (Seide et al. 2014, Karimireddy et al. 2019).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _compress_leaf(g, ef, key, bits: int):
+    gf = g.astype(jnp.float32) + ef
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / qmax
+    scaled = gf / scale
+    noise = jax.random.uniform(key, gf.shape, minval=-0.5, maxval=0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -qmax, qmax)
+    deq = q * scale
+    return deq, gf - deq
+
+
+def compress_decompress(grads, ef_state, *, bits: int, rng):
+    """Returns (decompressed grads, new error-feedback state)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    ef_leaves = jax.tree.leaves(ef_state)
+    keys = jax.random.split(rng, len(leaves))
+    outs = [_compress_leaf(g, e, k, bits)
+            for g, e, k in zip(leaves, ef_leaves, keys)]
+    deq = treedef.unflatten([o[0] for o in outs])
+    new_ef = treedef.unflatten([o[1] for o in outs])
+    return deq, new_ef

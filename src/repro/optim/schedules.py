@@ -1,0 +1,25 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return fn
+
+
+def linear_decay(peak: float, total: int, floor: float = 0.0):
+    def fn(step):
+        prog = jnp.clip(step.astype(jnp.float32) / max(total, 1), 0.0, 1.0)
+        return peak + (floor - peak) * prog
+    return fn

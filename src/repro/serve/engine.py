@@ -1,0 +1,82 @@
+"""Batched serving engine for (quantized) LMs.
+
+Static-batch engine with jitted prefill and decode steps; weights may be
+float or packed QuantizedTensor (the paper's deployment format — dequant
+happens inside the fused Pallas matmul on TPU). Exposes:
+
+  * generate(prompts)       — batched prefill + greedy/sampled decode
+  * score(tokens)           — teacher-forced log-likelihoods
+
+Continuous batching at pod scale is driven by launch/serve.py; this module
+is the single-replica execution core.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import (init_cache, lm_decode, lm_forward,
+                                      lm_prefill)
+from repro.serve.sampling import sample
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: np.ndarray          # (B, max_new)
+    n_prompt: int
+    steps: int
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_new", "temperature",
+                                             "top_k", "eos_id"))
+def _generate_jit(cfg, params, prompts, key, max_new, temperature, top_k,
+                  eos_id):
+    b, s = prompts.shape
+    cache = init_cache(cfg, b, s + max_new)
+    logits, cache = lm_prefill(cfg, params, prompts, cache)
+
+    def step(carry, t):
+        cache, logits, key, done = carry
+        key, sk = jax.random.split(key)
+        tok = sample(logits, sk, temperature=temperature, top_k=top_k)
+        tok = jnp.where(done, eos_id, tok)
+        done = done | (tok == eos_id) if eos_id >= 0 else done
+        pos = jnp.full((b, 1), s + t, jnp.int32)
+        logits, cache = lm_decode(cfg, params, tok[:, None], cache, pos)
+        return (cache, logits, key, done), tok
+
+    (_, _, _, _), toks = jax.lax.scan(
+        step, (cache, logits, key, jnp.zeros((b,), bool)),
+        jnp.arange(max_new, dtype=jnp.int32))
+    return toks.T                                              # (B, max_new)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, eos_id: int = -1):
+        self.cfg = cfg
+        self.params = params
+        self.eos_id = eos_id
+
+    def generate(self, prompts: np.ndarray, *, max_new: int = 32,
+                 temperature: float = 0.0, top_k: int = 0,
+                 key: Optional[jax.Array] = None) -> GenerateResult:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        toks = _generate_jit(self.cfg, self.params,
+                             jnp.asarray(prompts, jnp.int32), key, max_new,
+                             temperature, top_k, self.eos_id)
+        return GenerateResult(np.asarray(toks), prompts.shape[1], max_new)
+
+    def score(self, tokens: np.ndarray) -> np.ndarray:
+        """Per-token log-likelihoods (B, S-1)."""
+        toks = jnp.asarray(tokens, jnp.int32)
+        logits, _ = lm_forward(self.cfg, self.params, toks[:, :-1])
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, toks[:, 1:][..., None],
+                                 axis=-1)[..., 0]
+        return np.asarray(ll - lse)

@@ -1,0 +1,24 @@
+"""Token sampling strategies for the serving engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jax.Array, key, *, temperature: float = 1.0,
+           top_k: int = 0, top_p: float = 0.0) -> jax.Array:
+    """logits: (B, V) -> (B,) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    if top_p > 0.0:
+        srt = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(srt, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cut_idx = jnp.sum(cum < top_p, axis=-1)             # first idx past p
+        kth = jnp.take_along_axis(srt, cut_idx[:, None], axis=-1)
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

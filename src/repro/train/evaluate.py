@@ -1,0 +1,46 @@
+"""Evaluation: perplexity over a token stream + last-word accuracy (our
+offline LAMBADA analogue: predict the final token of a held-out window)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import lm_forward
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _nll_batch(cfg: ModelConfig, params, tokens, labels):
+    logits, _ = lm_forward(cfg, params, tokens)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    correct_last = (jnp.argmax(logits[:, -1, :], axis=-1) == labels[:, -1])
+    return jnp.sum(nll), nll.size, jnp.sum(correct_last), correct_last.size
+
+
+def perplexity(cfg: ModelConfig, params, tokens: np.ndarray, *,
+               seq_len: int = 128, batch_size: int = 8,
+               max_windows: int = 64) -> dict:
+    """Sliding non-overlapping windows; returns {'ppl', 'nll', 'last_acc'}."""
+    n_win = min((len(tokens) - 1) // seq_len, max_windows)
+    tot_nll, tot_cnt, tot_corr, tot_last = 0.0, 0, 0.0, 0
+    for b0 in range(0, n_win, batch_size):
+        bn = min(batch_size, n_win - b0)
+        idx = np.arange(b0, b0 + bn) * seq_len
+        toks = jnp.asarray(np.stack([tokens[s:s + seq_len] for s in idx]))
+        labs = jnp.asarray(np.stack([tokens[s + 1:s + seq_len + 1]
+                                     for s in idx]))
+        s_nll, cnt, s_corr, n_last = _nll_batch(cfg, params,
+                                                toks.astype(jnp.int32),
+                                                labs.astype(jnp.int32))
+        tot_nll += float(s_nll)
+        tot_cnt += int(cnt)
+        tot_corr += float(s_corr)
+        tot_last += int(n_last)
+    nll = tot_nll / max(tot_cnt, 1)
+    return {"ppl": float(np.exp(min(nll, 30.0))), "nll": nll,
+            "last_acc": tot_corr / max(tot_last, 1)}

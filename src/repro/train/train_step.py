@@ -1,0 +1,77 @@
+"""Jittable training step: loss -> grads -> (optional compression) -> clip ->
+Adam. Supports microbatched gradient accumulation via `lax.scan`."""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.transformer import lm_loss
+from repro.optim.adam import adam_init, adam_update, clip_by_global_norm
+from repro.optim.compression import compress_decompress
+
+
+def make_train_step(cfg: ModelConfig, *,
+                    lr_schedule: Callable[[jax.Array], jax.Array],
+                    clip_norm: float = 1.0,
+                    weight_decay: float = 0.0,
+                    accum_steps: int = 1,
+                    grad_compress_bits: int = 0,
+                    loss_fn=None,
+                    donate: bool = True):
+    loss_fn = loss_fn or lm_loss
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        return loss, metrics, grads
+
+    def step(params, opt_state, batch, step_idx, rng):
+        if accum_steps > 1:
+            def micro(carry, mb):
+                gacc, lacc = carry
+                loss, _, grads = grads_of(params, mb)
+                return (jax.tree.map(jnp.add, gacc, grads), lacc + loss), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                    *x.shape[1:]), batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (grads, loss), _ = jax.lax.scan(micro, (zero, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+            metrics = {"nll": loss, "aux": jnp.zeros(())}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        if grad_compress_bits:
+            # int8/4 compression with error feedback: the residual rides in
+            # opt_state["ef"] (simulates a compressed DP all-reduce)
+            grads, ef = compress_decompress(grads, opt_state["ef"],
+                                            bits=grad_compress_bits, rng=rng)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_schedule(step_idx)
+        new_params, new_adam = adam_update(
+            grads, opt_state["adam"], params, lr=lr,
+            weight_decay=weight_decay)
+        new_state = dict(opt_state)
+        new_state["adam"] = new_adam
+        if grad_compress_bits:
+            new_state["ef"] = ef
+        metrics = dict(metrics)
+        metrics.update({"loss": loss, "grad_norm": gnorm, "lr": lr})
+        return new_params, new_state, metrics
+
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+def init_opt_state(cfg: ModelConfig, params, grad_compress_bits: int = 0):
+    state = {"adam": adam_init(params)}
+    if grad_compress_bits:
+        state["ef"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state

@@ -1,0 +1,114 @@
+"""Pytree path utilities used across the framework.
+
+Params are nested dicts of jnp arrays (or QuantizedTensor leaves). We address
+sub-trees by '/'-joined key paths, e.g. "blocks/attn/wq/w".
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+def tree_paths(tree: Tree, prefix: str = "") -> list[str]:
+    """All leaf paths of a nested-dict tree ('/'-joined)."""
+    out: list[str] = []
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.extend(tree_paths(v, f"{prefix}{k}/"))
+    else:
+        out.append(prefix[:-1] if prefix else "")
+    return out
+
+
+def tree_get(tree: Tree, path: str) -> Any:
+    node = tree
+    for k in path.split("/"):
+        node = node[k]
+    return node
+
+
+def tree_set(tree: Tree, path: str, value: Any) -> Tree:
+    """Functional set: returns a new tree with `path` replaced by `value`."""
+    keys = path.split("/")
+
+    def rec(node: Tree, i: int) -> Tree:
+        if i == len(keys):
+            return value
+        new = dict(node)
+        new[keys[i]] = rec(node[keys[i]], i + 1)
+        return new
+
+    return rec(tree, 0)
+
+
+def tree_partition(
+    tree: Tree, predicate: Callable[[str], bool], prefix: str = ""
+) -> tuple[Tree, Tree]:
+    """Split a nested dict into (matching, rest) by path predicate.
+
+    Structure is preserved; non-selected leaves are replaced by None so the
+    two parts can be merged back with `tree_merge`. The predicate sees the
+    '/'-joined path of each *subtree or leaf*; once it matches, the whole
+    subtree goes to `matching`.
+    """
+    if not isinstance(tree, dict):
+        return (tree, None) if predicate(prefix[:-1]) else (None, tree)
+    if prefix and predicate(prefix[:-1]):
+        return tree, None
+    a: dict = {}
+    b: dict = {}
+    for k, v in tree.items():
+        av, bv = tree_partition(v, predicate, f"{prefix}{k}/")
+        a[k] = av
+        b[k] = bv
+    return a, b
+
+
+def tree_merge(a: Tree, b: Tree) -> Tree:
+    """Inverse of tree_partition: overlay two None-padded trees."""
+    if a is None:
+        return b
+    if b is None:
+        return a
+    assert isinstance(a, dict) and isinstance(b, dict), (a, b)
+    out = {}
+    for k in a.keys() | b.keys():
+        out[k] = tree_merge(a.get(k), b.get(k))
+    return out
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: Tree, prefix: str = "") -> Tree:
+    if isinstance(tree, dict):
+        return {k: tree_map_with_path(fn, v, f"{prefix}{k}/") for k, v in tree.items()}
+    return fn(prefix[:-1], tree)
+
+
+def tree_size_bytes(tree: Tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(x.size * x.dtype.itemsize for x in leaves if hasattr(x, "size"))
+
+
+def tree_num_params(tree: Tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(x.size) for x in leaves if hasattr(x, "size"))
+
+
+def tree_stack(trees: list[Tree]) -> Tree:
+    """Stack a list of identically-structured trees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_index(tree: Tree, i) -> Tree:
+    """Take slice i of every leaf along its leading (stacked) axis."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def tree_dynamic_index(tree: Tree, i) -> Tree:
+    """Like tree_index but with a traced integer index."""
+    return jax.tree.map(
+        lambda x: jax.lax.dynamic_index_in_dim(x, i, axis=0, keepdims=False), tree
+    )

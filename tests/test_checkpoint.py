@@ -1,0 +1,92 @@
+"""Checkpointing + fault-tolerant resume tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.store import load_tree, save_tree
+from repro.configs import TINY
+from repro.core.quant.types import QuantizedTensor, dequantize, quantize
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import make_corpus
+from repro.models.transformer import init_lm
+from repro.optim.schedules import constant
+from repro.train.train_step import init_opt_state, make_train_step
+from repro.train.trainer import StepTimeMonitor, Trainer
+
+CFG = TINY.replace(n_repeats=2, d_model=64, head_dim=16, d_ff=128)
+
+
+def test_store_roundtrip_with_quantized(tmp_path):
+    tree = {"a": {"w": jnp.arange(6.0).reshape(2, 3)},
+            "q": quantize(jax.random.normal(jax.random.PRNGKey(0), (16, 8)),
+                          4, 8),
+            "meta": {"n": 3}}
+    save_tree(str(tmp_path / "ck"), tree, {"tag": "x"})
+    loaded, extra = load_tree(str(tmp_path / "ck"))
+    assert extra["tag"] == "x"
+    assert loaded["meta"]["n"] == 3
+    np.testing.assert_allclose(np.asarray(loaded["a"]["w"]),
+                               np.asarray(tree["a"]["w"]))
+    assert isinstance(loaded["q"], QuantizedTensor)
+    np.testing.assert_allclose(np.asarray(dequantize(loaded["q"])),
+                               np.asarray(dequantize(tree["q"])))
+
+
+def test_manager_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in [10, 20, 30]:
+        mgr.save(s, {"w": jnp.full((2,), float(s))})
+    assert mgr.steps() == [20, 30]
+    step, params, opt, extra = mgr.restore()
+    assert step == 30
+    assert float(params["w"][0]) == 30.0
+
+
+def _make_trainer(tmp_path, crash_at=None):
+    corpus, _ = make_corpus(CFG.vocab_size, 30_000, seed=0)
+    params = init_lm(CFG, jax.random.PRNGKey(0))
+    pipe = DataPipeline(corpus, batch_size=8, seq_len=32, seed=0)
+    step_fn = make_train_step(CFG, lr_schedule=constant(1e-3), donate=False)
+    opt = init_opt_state(CFG, params)
+    ckpt = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    return Trainer(CFG, params, opt, step_fn, pipe, ckpt)
+
+
+def test_crash_resume_bit_exact(tmp_path):
+    # uninterrupted run
+    t_ref = _make_trainer(tmp_path / "ref")
+    t_ref.run(20, ckpt_every=5, log_every=0)
+    ref_params = t_ref.params
+
+    # crashing run + resume
+    t1 = _make_trainer(tmp_path / "crash")
+    with pytest.raises(RuntimeError):
+        t1.run(20, ckpt_every=5, log_every=0, crash_at=11)
+    t2 = _make_trainer(tmp_path / "crash")
+    resumed_from = t2.maybe_resume()
+    assert resumed_from == 10  # last checkpoint at step 9 (save at (s+1)%5)
+    t2.run(20, ckpt_every=5, log_every=0)
+
+    d = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), ref_params, t2.params)))
+    assert d == 0.0, f"resume not bit-exact: max delta {d}"
+
+
+def test_async_save_does_not_corrupt(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5, async_save=True)
+    for s in range(5):
+        mgr.save(s, {"w": jnp.full((1024,), float(s))})
+    mgr.wait()
+    step, params, _, _ = mgr.restore()
+    assert step == 4 and float(params["w"][0]) == 4.0
+
+
+def test_straggler_monitor():
+    mon = StepTimeMonitor(warmup=3, z=3.0)
+    flags = [mon.update(0.1) for _ in range(10)]
+    assert not any(flags)
+    assert mon.update(1.0)  # 10x slower step flagged

@@ -1,0 +1,67 @@
+"""Data pipeline + synthetic corpus tests."""
+import numpy as np
+
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import make_corpus, make_eval_sets
+
+
+def test_corpus_language_structure():
+    tokens, meta = make_corpus(256, 50_000, n_languages=4, seed=0)
+    assert tokens.min() >= 4  # specials reserved
+    # corpus share skewed toward language 0
+    counts = []
+    for lo, hi in meta.lang_ranges:
+        counts.append(((tokens >= lo) & (tokens < hi)).sum())
+    counts = np.array(counts, dtype=float) / len(tokens)
+    assert counts[0] > 0.4  # dominant language
+    assert counts[0] > counts[-1] * 2
+    top = meta.top_language_tokens(2)
+    lo0, hi0 = meta.lang_ranges[np.argmax(meta.mixture)]
+    assert lo0 in top
+
+
+def test_pipeline_deterministic_and_sharded():
+    tokens, _ = make_corpus(256, 50_000, seed=0)
+    p_a = DataPipeline(tokens, batch_size=8, seq_len=16, seed=3)
+    p_b = DataPipeline(tokens, batch_size=8, seq_len=16, seed=3)
+    b1, b2 = p_a.batch_at(7), p_b.batch_at(7)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    # labels shifted by one
+    assert np.array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    # shards partition the global batch
+    shards = [DataPipeline(tokens, batch_size=8, seq_len=16, seed=3,
+                           shard_id=i, n_shards=2).batch_at(7)["tokens"]
+              for i in range(2)]
+    assert np.array_equal(np.concatenate(shards), b1["tokens"])
+
+
+def test_pipeline_prefetch_thread():
+    tokens, _ = make_corpus(256, 20_000, seed=0)
+    p = DataPipeline(tokens, batch_size=4, seq_len=16, seed=0)
+    p.start(5)
+    step, batch = p.next()
+    assert step == 5
+    step2, _ = p.next()
+    assert step2 == 6
+    p.stop()
+    assert np.array_equal(batch["tokens"], p.batch_at(5)["tokens"])
+
+
+def test_eval_sets_are_per_language():
+    _, meta = make_corpus(256, 20_000, seed=0)
+    evals = make_eval_sets(meta, n_tokens=500)
+    assert len(evals) == meta.n_languages
+    for l, (name, toks) in enumerate(sorted(evals.items())):
+        lo, hi = meta.lang_ranges[l]
+        assert ((toks >= lo) & (toks < hi)).all()
+
+
+def test_byte_tokenizer_roundtrip():
+    from repro.data.tokenizer import ByteTokenizer, BOS, EOS
+
+    tok = ByteTokenizer()
+    for text in ["hello world", "Beijing is the capital of China.", "ü¥ø"]:
+        ids = tok.encode(text, bos=True, eos=True)
+        assert ids[0] == BOS and ids[-1] == EOS
+        assert tok.decode(ids) == text
+    assert tok.vocab_size == 260

@@ -1,0 +1,95 @@
+"""Serving-path equivalence: prefill+decode must reproduce the training
+forward (per family, incl. SWA ring buffer, MLA absorbed decode, SSD
+recurrence, whisper cross-attention)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.encdec import (encdec_decode, encdec_forward,
+                                 encdec_init_cache, encdec_prefill,
+                                 init_encdec)
+from repro.models.transformer import (init_cache, init_lm, lm_decode,
+                                      lm_forward, lm_prefill)
+
+FAMS = ["llama3.2-1b", "qwen2-0.5b", "chatglm3-6b", "granite-20b",
+        "mixtral-8x22b", "deepseek-v2-lite-16b", "mamba2-2.7b",
+        "jamba-1.5-large-398b"]
+
+
+def _cfg(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.moe:  # avoid token dropping noise in equivalence tests
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  capacity_factor=8.0))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = _cfg(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_lm(cfg, key)
+    b, s = 2, 24
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    logits, _ = lm_forward(cfg, params, tokens)
+    cache = init_cache(cfg, b, 64)
+    lg_pre, cache = lm_prefill(cfg, params, tokens[:, :s - 1], cache)
+    lg_dec, _ = lm_decode(cfg, params, tokens[:, s - 1:], cache,
+                          jnp.full((b, 1), s - 1, jnp.int32))
+    assert float(jnp.max(jnp.abs(lg_pre - logits[:, s - 2]))) < 2e-4
+    assert float(jnp.max(jnp.abs(lg_dec - logits[:, s - 1]))) < 2e-4
+
+
+def test_swa_ring_buffer_decode_past_window():
+    cfg = _cfg("mixtral-8x22b").replace(attn_window=16)
+    key = jax.random.PRNGKey(0)
+    params = init_lm(cfg, key)
+    b, s = 1, 48
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    logits, _ = lm_forward(cfg, params, tokens)
+    cache = init_cache(cfg, b, 64)
+    lg, cache = lm_prefill(cfg, params, tokens[:, :40], cache)
+    assert float(jnp.max(jnp.abs(lg - logits[:, 39]))) < 2e-4
+    for t in range(40, s):
+        lg, cache = lm_decode(cfg, params, tokens[:, t:t + 1], cache,
+                              jnp.full((b, 1), t, jnp.int32))
+        assert float(jnp.max(jnp.abs(lg - logits[:, t]))) < 2e-4
+
+
+def test_chunked_attention_matches_single_shot():
+    cfg = _cfg("llama3.2-1b").replace(attn_block_kv=8)
+    params = init_lm(cfg, jax.random.PRNGKey(1))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 40), 0,
+                                cfg.vocab_size)
+    l_chunk, _ = lm_forward(cfg, params, tokens)
+    l_full, _ = lm_forward(cfg.replace(attn_block_kv=4096), params, tokens)
+    assert float(jnp.max(jnp.abs(l_chunk - l_full))) < 2e-4
+
+
+def test_whisper_encdec_consistency():
+    cfg = _cfg("whisper-medium")
+    key = jax.random.PRNGKey(0)
+    params = init_encdec(cfg, key)
+    b, se, sd = 2, 16, 12
+    frames = jax.random.normal(key, (b, se, cfg.d_model)) * 0.3
+    tokens = jax.random.randint(key, (b, sd), 0, cfg.vocab_size)
+    logits, _ = encdec_forward(cfg, params, frames, tokens)
+    cache = encdec_init_cache(cfg, b, 64, enc_len=se)
+    lg, cache = encdec_prefill(cfg, params, frames, tokens[:, :sd - 1], cache)
+    assert float(jnp.max(jnp.abs(lg - logits[:, sd - 2]))) < 2e-4
+    lg, _ = encdec_decode(cfg, params, tokens[:, sd - 1:], cache,
+                          jnp.full((b, 1), sd - 1, jnp.int32))
+    assert float(jnp.max(jnp.abs(lg - logits[:, sd - 1]))) < 2e-4
+
+
+def test_scan_matches_unrolled():
+    cfg = _cfg("llama3.2-1b")
+    params = init_lm(cfg, jax.random.PRNGKey(3))
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (2, 16), 0,
+                                cfg.vocab_size)
+    l_scan, _ = lm_forward(cfg.replace(scan_layers=True), params, tokens)
+    l_unr, _ = lm_forward(cfg.replace(scan_layers=False), params, tokens)
+    assert float(jnp.max(jnp.abs(l_scan - l_unr))) < 2e-4

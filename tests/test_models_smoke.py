@@ -1,0 +1,60 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward + one train step on CPU, shape + no-NaN."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config, list_archs
+from repro.models.encdec import encdec_forward, encdec_loss, init_encdec
+from repro.models.transformer import init_lm, lm_forward, lm_loss
+from repro.optim.schedules import constant
+from repro.train.train_step import init_opt_state, make_train_step
+
+ARCHS = list_archs()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    cfg.validate()
+    key = jax.random.PRNGKey(0)
+    b, s = 2, 16
+
+    if cfg.enc_dec:
+        params = init_encdec(cfg, key)
+        frames = jax.random.normal(key, (b, 8, cfg.d_model)) * 0.3
+        tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+        logits, aux = encdec_forward(cfg, params, frames, tokens)
+        assert logits.shape == (b, s, cfg.vocab_size)
+        assert not bool(jnp.any(jnp.isnan(logits)))
+        batch = {"frames": frames, "tokens": tokens,
+                 "labels": jnp.roll(tokens, -1, 1)}
+        step = make_train_step(cfg, lr_schedule=constant(1e-3),
+                               loss_fn=encdec_loss, donate=False)
+        opt = init_opt_state(cfg, params)
+        p2, _, m = step(params, opt, batch, jnp.asarray(0), jax.random.PRNGKey(1))
+        assert np.isfinite(float(m["loss"]))
+        return
+
+    params = init_lm(cfg, key)
+    ext = None
+    if cfg.frontend == "vision":
+        ext = jax.random.normal(key, (b, cfg.frontend_len, cfg.d_model)) * 0.3
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    logits, aux = lm_forward(cfg, params, tokens, ext_embeds=ext)
+    total = s + (cfg.frontend_len if ext is not None else 0)
+    assert logits.shape == (b, total, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+    if ext is not None:
+        batch["ext_embeds"] = ext
+    step = make_train_step(cfg, lr_schedule=constant(1e-3), donate=False)
+    opt = init_opt_state(cfg, params)
+    p2, _, m = step(params, opt, batch, jnp.asarray(0), jax.random.PRNGKey(1))
+    assert np.isfinite(float(m["loss"]))
+    # params actually moved
+    delta = jax.tree.map(lambda a, b_: float(jnp.max(jnp.abs(a - b_))),
+                         params, p2)
+    assert max(jax.tree.leaves(delta)) > 0.0

@@ -1,0 +1,65 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.normtweak.losses import l_dist, l_kl, l_mse
+from repro.core.quant.smoothquant import (fold_into_norm, scale_weight_rows,
+                                          smooth_scales)
+from repro.core.quant.types import dequantize, quantize
+from repro.models.attention import _cache_write, init_kv_cache
+from repro.models.config import ModelConfig
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), shift=st.floats(-2.0, 2.0))
+def test_losses_nonnegative_and_monotone_in_shift(seed, shift):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 8, 8))
+    for fn in (l_dist, l_mse, l_kl):
+        v0 = float(fn(x, x))
+        v1 = float(fn(x, x + shift))
+        assert v0 >= -1e-6
+        assert v1 >= v0 - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), alpha=st.floats(0.1, 0.9))
+def test_smoothquant_scales_positive_and_transform_invertible(seed, alpha):
+    key = jax.random.PRNGKey(seed)
+    amax = jnp.abs(jax.random.normal(key, (16,))) + 0.1
+    w = jax.random.normal(key, (16, 8))
+    s = smooth_scales(amax, [w], alpha)
+    assert bool(jnp.all(s > 0))
+    w2 = scale_weight_rows(scale_weight_rows(w, s), 1.0 / s)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w), rtol=1e-5,
+                               atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 500))
+def test_dequant_never_exceeds_group_amax(bits, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (32, 8)) * 3.0
+    qt = quantize(w, bits, 8)
+    deq = np.asarray(dequantize(qt))
+    wg = np.asarray(w).reshape(4, 8, 8)
+    dg = deq.reshape(4, 8, 8)
+    amax = np.abs(wg).max(axis=1, keepdims=True)
+    assert np.all(np.abs(dg) <= amax + 1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(window=st.sampled_from([4, 8]), n=st.integers(5, 20))
+def test_ring_cache_holds_last_window_positions(window, n):
+    cfg = ModelConfig(d_model=16, n_heads=2, n_kv_heads=2, head_dim=8)
+    cache = init_kv_cache(cfg, 1, 64, window=window)
+    for t in range(n):
+        k = jnp.full((1, 1, 2, 8), float(t))
+        pos = jnp.full((1, 1), t, jnp.int32)
+        cache = _cache_write(cache, k, k, pos)
+    held = sorted(int(p) for p in np.asarray(cache["pos"][0]) if p >= 0)
+    expect = list(range(max(0, n - window), n))
+    assert held == expect
+    # values stored where expected
+    slot = (n - 1) % window
+    assert float(cache["k"][0, slot, 0, 0]) == float(n - 1)

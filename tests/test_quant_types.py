@@ -1,0 +1,90 @@
+"""Quantizer + packing unit & property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant.types import (QuantizedTensor, compute_scales,
+                                    dequantize, fake_quant, pack,
+                                    qmax_for_bits, quantize, quantize_stacked,
+                                    quantize_values, unpack)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("k,n", [(8, 4), (64, 32), (62, 8)])
+def test_pack_unpack_roundtrip(bits, k, n):
+    rng = np.random.default_rng(0)
+    qmax = qmax_for_bits(bits)
+    q = jnp.asarray(rng.integers(-qmax, qmax + 1, size=(k, n)), jnp.int32)
+    assert jnp.all(unpack(pack(q, bits), bits, k) == q)
+
+
+@pytest.mark.parametrize("bits,gs", [(2, -1), (4, -1), (4, 16), (8, 32), (3, -1)])
+def test_quantize_dequantize_error_bound(bits, gs):
+    key = jax.random.PRNGKey(1)
+    w = jax.random.normal(key, (64, 32))
+    qt = quantize(w, bits, gs)
+    deq = dequantize(qt)
+    # max error is half a quantization step per group
+    k = 64
+    g = qt.scale.shape[0]
+    step = np.repeat(np.asarray(qt.scale), k // g, axis=0)
+    assert np.all(np.abs(np.asarray(deq - w)) <= step / 2 + 1e-6)
+
+
+def test_fake_quant_matches_pack_path():
+    w = jax.random.normal(jax.random.PRNGKey(2), (32, 16))
+    fq = fake_quant(w, 4, 8)
+    deq = dequantize(quantize(w, 4, 8))
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(deq), atol=1e-6)
+
+
+def test_fake_quant_idempotent():
+    w = jax.random.normal(jax.random.PRNGKey(3), (32, 16))
+    s = compute_scales(w, 4, -1)
+    once = fake_quant(w, 4, -1, scale=s)
+    twice = fake_quant(once, 4, -1, scale=s)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-6)
+
+
+def test_stacked_experts_roundtrip():
+    w = jax.random.normal(jax.random.PRNGKey(4), (3, 32, 16))
+    qt = quantize_stacked(w, 4, 8)
+    assert qt.qw.shape == (3, 16, 16)
+    deq = dequantize(qt)
+    assert deq.shape == w.shape
+    per = [dequantize(quantize(w[i], 4, 8)) for i in range(3)]
+    np.testing.assert_allclose(np.asarray(deq), np.stack(per), atol=1e-6)
+
+
+def test_quantized_tensor_is_pytree():
+    w = jax.random.normal(jax.random.PRNGKey(5), (16, 8))
+    qt = quantize(w, 4)
+    leaves, treedef = jax.tree.flatten(qt)
+    assert len(leaves) == 2
+    qt2 = jax.tree.unflatten(treedef, leaves)
+    assert qt2.bits == 4 and qt2.shape == (16, 8)
+    # scan-style leading-dim slicing survives the static aux
+    stacked = jax.tree.map(lambda x: jnp.stack([x, x]), qt)
+    sliced = jax.tree.map(lambda x: x[0], stacked)
+    np.testing.assert_allclose(np.asarray(dequantize(sliced)),
+                               np.asarray(dequantize(qt)), atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]),
+       k=st.sampled_from([16, 32, 64]),
+       n=st.sampled_from([8, 24]),
+       seed=st.integers(0, 2 ** 16))
+def test_property_quantize_bounded_and_symmetric(bits, k, n, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n))
+    qt = quantize(w, bits)
+    deq = np.asarray(dequantize(qt))
+    qmax = qmax_for_bits(bits)
+    scale = np.asarray(qt.scale)[0]
+    # dequantized values lie on the symmetric grid within qmax steps
+    assert np.all(np.abs(deq) <= scale * qmax + 1e-6)
+    # negating the input negates the quantization (symmetric grid)
+    qt_neg = quantize(-w, bits)
+    np.testing.assert_allclose(np.asarray(dequantize(qt_neg)), -deq, atol=1e-5)

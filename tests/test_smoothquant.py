@@ -1,0 +1,48 @@
+"""SmoothQuant: exactness of the float transform + outlier-case benefit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant.smoothquant import (fold_into_norm, scale_weight_rows,
+                                          smooth_scales)
+from repro.core.quant.types import fake_quant, fake_quant_activation
+from repro.models.config import ModelConfig
+from repro.models.norms import apply_norm, init_norm
+
+
+def test_smoothing_is_exact_in_float():
+    cfg = ModelConfig(norm="layernorm")
+    key = jax.random.PRNGKey(0)
+    d, n = 32, 16
+    norm = init_norm(cfg, d)
+    norm["scale"] = jax.random.normal(key, (d,)) * 0.1 + 1.0
+    norm["bias"] = jax.random.normal(key, (d,)) * 0.1
+    w = jax.random.normal(key, (d, n)) * 0.2
+    x = jax.random.normal(key, (4, 8, d)) * jnp.linspace(0.1, 8.0, d)
+
+    y_ref = apply_norm(cfg, norm, x) @ w
+    amax = jnp.max(jnp.abs(apply_norm(cfg, norm, x).reshape(-1, d)), axis=0)
+    s = smooth_scales(amax, [w], alpha=0.5)
+    norm2 = fold_into_norm(norm, s)
+    w2 = scale_weight_rows(w, s)
+    y_smooth = apply_norm(cfg, norm2, x) @ w2
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_smooth),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_smoothing_reduces_w8a8_error_with_outliers():
+    key = jax.random.PRNGKey(1)
+    d, n, t = 64, 32, 256
+    # activation outliers in a few channels (the LLM.int8 phenomenon)
+    x = jax.random.normal(key, (t, d))
+    x = x.at[:, :4].mul(30.0)
+    w = jax.random.normal(key, (d, n)) * 0.2
+    y_ref = x @ w
+
+    def w8a8(xx, ww):
+        return fake_quant_activation(xx, 8) @ fake_quant(ww, 8, -1)
+
+    err_plain = jnp.mean((y_ref - w8a8(x, w)) ** 2)
+    s = smooth_scales(jnp.max(jnp.abs(x), axis=0), [w], alpha=0.5)
+    err_smooth = jnp.mean((y_ref - w8a8(x / s, w * s[:, None])) ** 2)
+    assert float(err_smooth) < float(err_plain) * 0.5

@@ -1,0 +1,107 @@
+"""Training substrate: convergence, grad accumulation, compression, schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import TINY
+from repro.data.pipeline import DataPipeline
+from repro.data.synthetic import make_corpus
+from repro.models.transformer import init_lm
+from repro.optim.adam import adam_init, adam_update, clip_by_global_norm
+from repro.optim.compression import compress_decompress
+from repro.optim.schedules import constant, linear_decay, warmup_cosine
+from repro.train.train_step import init_opt_state, make_train_step
+
+CFG = TINY.replace(n_repeats=2, d_model=64, head_dim=16, d_ff=128)
+
+
+def _train(cfg, steps, **kw):
+    corpus, _ = make_corpus(cfg.vocab_size, 30_000, seed=0)
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    pipe = DataPipeline(corpus, batch_size=8, seq_len=32, seed=0)
+    step_fn = make_train_step(cfg, lr_schedule=constant(3e-3), **kw)
+    opt = init_opt_state(cfg, params,
+                         grad_compress_bits=kw.get("grad_compress_bits", 0))
+    losses = []
+    for s in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()}
+        params, opt, m = step_fn(params, opt, batch, jnp.asarray(s),
+                                 jax.random.fold_in(jax.random.PRNGKey(9), s))
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def test_loss_decreases():
+    losses = _train(CFG, 30)
+    assert losses[-1] < losses[0] * 0.9
+
+
+def test_grad_compression_still_converges():
+    """int8 compression + error feedback must not break optimization."""
+    plain = _train(CFG, 30)
+    comp = _train(CFG, 30, grad_compress_bits=8)
+    assert comp[-1] < comp[0] * 0.9
+    assert abs(comp[-1] - plain[-1]) < 0.5
+
+
+def test_grad_accumulation_matches_full_batch():
+    cfg = CFG
+    corpus, _ = make_corpus(cfg.vocab_size, 30_000, seed=0)
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    pipe = DataPipeline(corpus, batch_size=8, seq_len=32, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    rng = jax.random.PRNGKey(9)
+
+    f_full = make_train_step(cfg, lr_schedule=constant(1e-3), donate=False)
+    f_acc = make_train_step(cfg, lr_schedule=constant(1e-3), accum_steps=4,
+                            donate=False)
+    o1 = init_opt_state(cfg, params)
+    o2 = init_opt_state(cfg, params)
+    p1, _, m1 = f_full(params, o1, batch, jnp.asarray(0), rng)
+    p2, _, m2 = f_acc(params, o2, batch, jnp.asarray(0), rng)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3
+    d = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), p1, p2)))
+    assert d < 1e-4
+
+
+def test_adam_decreases_quadratic():
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = adam_init(params)
+    for _ in range(200):
+        grads = {"x": 2 * params["x"]}
+        params, state = adam_update(grads, state, params, lr=0.1)
+    assert float(jnp.max(jnp.abs(params["x"]))) < 0.2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(20.0)
+    from repro.optim.adam import global_norm
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_compression_error_feedback_is_lossless_in_sum():
+    """error feedback: quantization error is carried, not dropped."""
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=64),
+                          jnp.float32)}
+    ef = {"w": jnp.zeros((64,))}
+    total_sent = jnp.zeros((64,))
+    for i in range(50):
+        deq, ef = compress_decompress(g, ef, bits=4,
+                                      rng=jax.random.PRNGKey(i))
+        total_sent = total_sent + deq["w"]
+    # average transmitted gradient converges to the true gradient
+    np.testing.assert_allclose(np.asarray(total_sent / 50),
+                               np.asarray(g["w"]), atol=0.05)
+
+
+def test_schedules():
+    sc = warmup_cosine(1.0, 10, 100)
+    assert float(sc(jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(sc(jnp.asarray(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(sc(jnp.asarray(100))) == pytest.approx(0.0, abs=1e-3)
+    ld = linear_decay(1.0, 100)
+    assert float(ld(jnp.asarray(50))) == pytest.approx(0.5)
