@@ -1,8 +1,12 @@
 """Serving launcher: quantize (GPTQ/RTN/SmoothQuant ± Norm-Tweaking) and
-serve batched requests with packed low-bit weights.
+drive the continuous-batching engine with Poisson traffic, reporting
+throughput and per-request latency percentiles.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-        --bits 4 --method gptq --requests 8
+        --bits 4 --method gptq --requests 16 --rate 8.0
+
+`--no-smoke` runs the full-size config. `--engine static` runs the old
+static-batch engine on the same workload for comparison.
 """
 from __future__ import annotations
 
@@ -18,23 +22,131 @@ from repro.core.normtweak.pipeline import NTConfig, norm_tweak_ptq
 from repro.distributed.partitioning import rules_for_config
 from repro.distributed.sharding import sharding_ctx
 from repro.models.transformer import init_lm
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ContinuousEngine, ServeEngine
 from repro.utils.tree import tree_size_bytes
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
+
+
+def build_params(cfg, args):
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    print(f"{cfg.name}: float {tree_size_bytes(params) / 1e6:.1f} MB")
+    if args.method != "none":
+        calib = generate_calibration(cfg, params, jax.random.PRNGKey(1),
+                                     n_samples=8, token_length=32)
+        nt = NTConfig(method=args.method, bits=args.bits,
+                      group_size=args.group_size,
+                      tweak=not args.no_tweak, lr0=1e-3, iters=1,
+                      sample_batch=4,
+                      act_bits=8 if args.method == "smoothquant" else 0)
+        params, _ = norm_tweak_ptq(cfg, params, calib, nt,
+                                   log=lambda s: print("  " + s))
+        print(f"quantized: {tree_size_bytes(params) / 1e6:.1f} MB "
+              f"(W{args.bits}{'+NT' if not args.no_tweak else ''})")
+    return params
+
+
+def make_workload(cfg, args):
+    """Poisson arrivals with uniform prompt-length / decode-length mix."""
+    rng = np.random.default_rng(args.seed)
+    inter = (rng.exponential(1.0 / args.rate, args.requests)
+             if args.rate > 0 else np.zeros(args.requests))
+    arrivals = np.cumsum(inter)
+    work = []
+    for i in range(args.requests):
+        plen = int(rng.integers(args.prompt_len_min, args.prompt_len_max + 1))
+        mnew = int(rng.integers(args.max_new_min, args.max_new_max + 1))
+        prompt = rng.integers(0, cfg.vocab_size, plen)
+        work.append((prompt, mnew, float(arrivals[i])))
+    return work
+
+
+def run_continuous(cfg, params, work, args):
+    # per-slot capacity must cover a bucket-padded prompt plus max decode,
+    # or the bucket-length warm-up requests below would overflow it
+    bucket_up = -(-args.prompt_len_max // args.prefill_bucket) \
+        * args.prefill_bucket
+    max_len = bucket_up + args.max_new_max
+    eng = ContinuousEngine(cfg, params, n_slots=args.slots,
+                           max_len=max_len, page_size=args.page_size,
+                           prefill_bucket=args.prefill_bucket)
+    # warm the jit caches — every prefill bucket in the workload, decoded
+    # both shallow and to full depth so the common (k, width) decode-scan
+    # shapes compile before timing (odd depth/remaining combos in the real
+    # traffic can still hit a fresh shape mid-run)
+    buckets = sorted({eng._bucket(len(p)) for p, _, _ in work})
+    for b in buckets:
+        for mn in {2, args.max_new_max}:
+            eng.submit(np.zeros(b, np.int64), max_new=mn)
+    eng.run(max_steps=10_000)
+    print(f"warmed {len(buckets)} prefill buckets: {buckets}")
+    eng.n_decode_steps = eng.n_prefills = 0     # report the timed run only
+
+    for prompt, max_new, arrival in work:
+        eng.submit(prompt, max_new=max_new, arrival=arrival)
+    t0 = time.time()
+    done = eng.run(clock=lambda: time.time() - t0, max_steps=1_000_000)
+    dt = time.time() - t0
+    total_tok = sum(len(r.tokens) for r in done)
+    lat = [r.finished_at - r.arrival for r in done]
+    ttft = [r.first_token_at - r.arrival for r in done]
+    print(f"continuous: {len(done)} requests, {total_tok} tokens in {dt:.2f}s "
+          f"({total_tok / dt:.1f} tok/s; {eng.n_decode_steps} decode steps, "
+          f"{eng.n_prefills} prefills)")
+    print(f"  latency  p50 {_pct(lat, 50):.3f}s  p90 {_pct(lat, 90):.3f}s  "
+          f"p99 {_pct(lat, 99):.3f}s")
+    print(f"  ttft     p50 {_pct(ttft, 50):.3f}s  p99 {_pct(ttft, 99):.3f}s")
+    print("request 0:", done[0].tokens)
+
+
+def run_static(cfg, params, work, args):
+    """Static-batch baseline: uniform-length groups decoded in lockstep."""
+    eng = ServeEngine(cfg, params)
+    groups: dict[int, list] = {}
+    for prompt, max_new, _ in work:
+        groups.setdefault(len(prompt), []).append((prompt, max_new))
+    t0 = time.time()
+    total = 0
+    for plen, items in sorted(groups.items()):
+        for i in range(0, len(items), args.slots):
+            chunk = items[i:i + args.slots]
+            prompts = np.stack([p for p, _ in chunk])
+            mnew = max(m for _, m in chunk)
+            eng.generate(prompts, max_new=mnew, temperature=0.0)
+            total += sum(m for _, m in chunk)
+    dt = time.time() - t0
+    print(f"static: {len(work)} requests, {total} useful tokens in {dt:.2f}s "
+          f"({total / dt:.1f} tok/s, incl. compile)")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b",
                     choices=["tiny"] + list_archs())
-    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="use the reduced config of --arch (--no-smoke for "
+                         "full size)")
     ap.add_argument("--method", default="gptq",
                     choices=["gptq", "rtn", "smoothquant", "none"])
     ap.add_argument("--bits", type=int, default=4)
     ap.add_argument("--group-size", type=int, default=-1)
     ap.add_argument("--no-tweak", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--engine", default="continuous",
+                    choices=["continuous", "static", "both"])
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="Poisson arrival rate, req/s (0 = all at t=0)")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill-bucket", type=int, default=16)
+    ap.add_argument("--prompt-len-min", type=int, default=8)
+    ap.add_argument("--prompt-len-max", type=int, default=64)
+    ap.add_argument("--max-new-min", type=int, default=8)
+    ap.add_argument("--max-new-max", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -45,31 +157,12 @@ def main():
     rules = rules_for_config(cfg, mesh) if mesh else None
 
     with sharding_ctx(mesh, rules):
-        params = init_lm(cfg, jax.random.PRNGKey(0))
-        print(f"{cfg.name}: float {tree_size_bytes(params) / 1e6:.1f} MB")
-        if args.method != "none":
-            calib = generate_calibration(cfg, params, jax.random.PRNGKey(1),
-                                         n_samples=8, token_length=32)
-            nt = NTConfig(method=args.method, bits=args.bits,
-                          group_size=args.group_size,
-                          tweak=not args.no_tweak, lr0=1e-3, iters=1,
-                          sample_batch=4,
-                          act_bits=8 if args.method == "smoothquant" else 0)
-            params, _ = norm_tweak_ptq(cfg, params, calib, nt,
-                                       log=lambda s: print("  " + s))
-            print(f"quantized: {tree_size_bytes(params) / 1e6:.1f} MB "
-                  f"(W{args.bits}{'+NT' if not args.no_tweak else ''})")
-
-        eng = ServeEngine(cfg, params)
-        prompts = np.random.default_rng(0).integers(
-            0, cfg.vocab_size, (args.requests, args.prompt_len))
-        t0 = time.time()
-        res = eng.generate(prompts, max_new=args.max_new, temperature=0.0)
-        dt = time.time() - t0
-        tps = args.requests * args.max_new / dt
-        print(f"served {args.requests} requests x {args.max_new} tokens in "
-              f"{dt:.2f}s ({tps:.1f} tok/s)")
-        print("request 0:", res.tokens[0].tolist())
+        params = build_params(cfg, args)
+        work = make_workload(cfg, args)
+        if args.engine in ("continuous", "both"):
+            run_continuous(cfg, params, work, args)
+        if args.engine in ("static", "both"):
+            run_static(cfg, params, work, args)
 
 
 if __name__ == "__main__":

@@ -9,6 +9,10 @@ KV caches:
     (-1 = empty), "len": (B,) fill counts}
   * sliding-window (Mixtral SWA): same structure with Smax = window; writes
     wrap modulo window (ring buffer), masking is driven by the "pos" array.
+  * paged (continuous batching): {"k_pool","v_pool": (P, page, KVH, hd)};
+    reads gather the slot's pages via the block table threaded in through
+    `paged`, with mask positions derived from per-slot fill counts
+    (see serve/kvcache.py, DESIGN.md).
 RoPE is applied before cache insertion (post-rope keys are cached).
 """
 from __future__ import annotations
@@ -22,6 +26,8 @@ from repro.distributed.sharding import lc
 from repro.models.config import ModelConfig
 from repro.models.linear import dense, init_dense
 from repro.models.rope import apply_rope
+from repro.serve.kvcache import (PageSpec, contiguous_positions, gather_pages,
+                                 prefill_page_index)
 
 NEG = -1e30
 
@@ -182,6 +188,85 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, *,
     return cache
 
 
+def init_paged_kv_cache(cfg: ModelConfig, spec: PageSpec) -> dict:
+    """Page-pool cache for one attention block (continuous batching).
+
+    Sliding-window models still allocate full-length pages under paging;
+    the window mask in attention_core keeps reads correct (see DESIGN.md).
+    """
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    cache = {}
+    if cfg.kv_cache_bits == 8:
+        cache["k_pool"] = jnp.zeros((spec.n_pages, spec.page_size, kvh, hd),
+                                    jnp.int8)
+        cache["v_pool"] = jnp.zeros((spec.n_pages, spec.page_size, kvh, hd),
+                                    jnp.int8)
+        cache["k_scale_pool"] = jnp.zeros((spec.n_pages, spec.page_size, kvh),
+                                          jnp.float32)
+        cache["v_scale_pool"] = jnp.zeros((spec.n_pages, spec.page_size, kvh),
+                                          jnp.float32)
+    else:
+        cache["k_pool"] = jnp.zeros((spec.n_pages, spec.page_size, kvh, hd),
+                                    cfg.adtype)
+        cache["v_pool"] = jnp.zeros((spec.n_pages, spec.page_size, kvh, hd),
+                                    cfg.adtype)
+    return cache
+
+
+def _paged_update(cache: dict, k, v, positions, paged: dict):
+    """Scatter new K/V into the page pool; return (new_cache, read view).
+
+    Prefill (paged has "bt_rows"): writes a batch of admitted slots'
+    (left-padded) prompts; the read view is the current sequence itself — a
+    fresh request attends only to its own prompt. Decode (paged has
+    "block_table"): writes one token per slot at (write_page, write_off),
+    then gathers each slot's pages into a contiguous (S, width*page, ...)
+    view for attention, with mask positions derived from the per-slot fill
+    counts in paged["kv_len"]. The block table passed for decode may be
+    truncated to the live read width (pow2 pages) by the engine.
+    """
+    new = dict(cache)
+    quant = "k_scale_pool" in cache
+    if "bt_rows" in paged:                          # prefill (batch of slots)
+        ps = cache["k_pool"].shape[1]
+        pages, offs = prefill_page_index(paged["bt_rows"], positions, ps)
+        if quant:
+            kq, ks = _quant_kv(k)
+            vq, vs = _quant_kv(v)
+            new["k_pool"] = cache["k_pool"].at[pages, offs].set(kq)
+            new["v_pool"] = cache["v_pool"].at[pages, offs].set(vq)
+            new["k_scale_pool"] = cache["k_scale_pool"].at[pages, offs].set(ks)
+            new["v_scale_pool"] = cache["v_scale_pool"].at[pages, offs].set(vs)
+        else:
+            new["k_pool"] = cache["k_pool"].at[pages, offs].set(
+                k.astype(cache["k_pool"].dtype))
+            new["v_pool"] = cache["v_pool"].at[pages, offs].set(
+                v.astype(cache["v_pool"].dtype))
+        return new, (k, v, positions)
+    bt = paged["block_table"]                                 # decode step
+    wp, wo = paged["write_page"], paged["write_off"]
+    if quant:
+        kq, ks = _quant_kv(k)
+        vq, vs = _quant_kv(v)
+        new["k_pool"] = cache["k_pool"].at[wp, wo].set(kq[:, 0])
+        new["v_pool"] = cache["v_pool"].at[wp, wo].set(vq[:, 0])
+        new["k_scale_pool"] = cache["k_scale_pool"].at[wp, wo].set(ks[:, 0])
+        new["v_scale_pool"] = cache["v_scale_pool"].at[wp, wo].set(vs[:, 0])
+        kg = _dequant_kv(gather_pages(new["k_pool"], bt),
+                         gather_pages(new["k_scale_pool"], bt), k.dtype)
+        vg = _dequant_kv(gather_pages(new["v_pool"], bt),
+                         gather_pages(new["v_scale_pool"], bt), v.dtype)
+    else:
+        new["k_pool"] = cache["k_pool"].at[wp, wo].set(
+            k[:, 0].astype(cache["k_pool"].dtype))
+        new["v_pool"] = cache["v_pool"].at[wp, wo].set(
+            v[:, 0].astype(cache["v_pool"].dtype))
+        kg = gather_pages(new["k_pool"], bt)
+        vg = gather_pages(new["v_pool"], bt)
+    kv_pos = contiguous_positions(paged["kv_len"], kg.shape[1])
+    return new, (kg, vg, kv_pos)
+
+
 def _quant_kv(x: jax.Array):
     """x: (B, S, KVH, hd) -> (int8 values, (B, S, KVH) scales)."""
     amax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1), 1e-6)
@@ -232,9 +317,11 @@ def apply_attention(cfg: ModelConfig, p: dict, x: jax.Array, *,
                     kv_src: Optional[jax.Array] = None,
                     kv_positions: Optional[jax.Array] = None,
                     rope_variant: Optional[str] = None,
+                    paged: Optional[dict] = None,
                     taps: Optional[dict] = None, tap_prefix: str = ""):
     """Returns (y, new_cache). `kv_src` => cross-attention (no rope/cache-write
-    unless cache holds precomputed cross K/V under k/v)."""
+    unless cache holds precomputed cross K/V under k/v). `paged` carries the
+    block-table indices for a paged cache (see serve/kvcache.py)."""
     b, s, d = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     rope_variant = rope_variant if rope_variant is not None else cfg.rope
@@ -252,7 +339,8 @@ def apply_attention(cfg: ModelConfig, p: dict, x: jax.Array, *,
     q = lc(q, "batch", "seq", "heads", "head_dim")
     q = apply_rope(q, positions, theta=cfg.rope_theta, variant=rope_variant)
 
-    if cache is not None and "len" not in cache and kv_src is None:
+    if (cache is not None and "len" not in cache and "k_pool" not in cache
+            and kv_src is None):
         # precomputed cross-attention K/V (whisper decode)
         k, v = cache["k"], cache["v"]
         kv_pos = cache["pos"]
@@ -264,7 +352,14 @@ def apply_attention(cfg: ModelConfig, p: dict, x: jax.Array, *,
         v = dense(p["wv"], src).reshape(kv_b, kv_s, kvh, hd)
         kpos = kv_positions if kv_positions is not None else positions
         k = apply_rope(k, kpos, theta=cfg.rope_theta, variant=rope_variant)
-        if cache is not None and "len" not in cache:
+        if cache is not None and "k_pool" in cache:
+            # paged cache (continuous batching): scatter new K/V into the
+            # page pool, read back via the slot block tables
+            assert paged is not None, \
+                "paged cache requires block-table indices"
+            new_cache, (k, v, kv_pos) = _paged_update(cache, k, v, kpos,
+                                                      paged)
+        elif cache is not None and "len" not in cache:
             # cross-attention cache fill (enc-dec prefill)
             new_cache = {"k": k.astype(cache["k"].dtype),
                          "v": v.astype(cache["v"].dtype), "pos": kpos}

@@ -7,11 +7,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import LayerSpec, ModelConfig
-from repro.models.attention import apply_attention, init_attention, init_kv_cache
-from repro.models.mla import apply_mla, init_mla, init_mla_cache
+from repro.models.attention import (apply_attention, init_attention,
+                                    init_kv_cache, init_paged_kv_cache)
+from repro.models.mla import apply_mla, init_mla, init_mla_cache, \
+    init_paged_mla_cache
 from repro.models.mamba2 import apply_mamba, init_mamba, init_mamba_cache
 from repro.models.mlp_moe import apply_mlp, apply_moe, init_mlp, init_moe
 from repro.models.norms import apply_norm, init_norm
+from repro.serve.kvcache import PageSpec
 
 
 def init_block(cfg: ModelConfig, spec: LayerSpec, key) -> dict:
@@ -38,9 +41,20 @@ def init_block(cfg: ModelConfig, spec: LayerSpec, key) -> dict:
 
 
 def init_block_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
-                     max_len: int, enc_len: int = 0) -> dict:
+                     max_len: int, enc_len: int = 0,
+                     paged: Optional[PageSpec] = None) -> dict:
+    """`paged`: build page-pool caches for continuous batching; `batch` is
+    then the slot count (Mamba state caches stay slot-indexed, unpaged)."""
     c: dict = {}
     if spec.kind == "attn":
+        if paged is not None:
+            if spec.cross_attn:
+                raise NotImplementedError(
+                    "paged serving does not cover enc-dec cross-attention")
+            c["attn"] = (init_paged_mla_cache(cfg, paged)
+                         if cfg.attention == "mla"
+                         else init_paged_kv_cache(cfg, paged))
+            return c
         if cfg.attention == "mla":
             c["attn"] = init_mla_cache(cfg, batch, max_len)
         else:
@@ -62,8 +76,10 @@ def apply_block(cfg: ModelConfig, spec: LayerSpec, p: dict, x: jax.Array, *,
                 positions: jax.Array, mode: str = "train",
                 cache: Optional[dict] = None,
                 enc_out: Optional[jax.Array] = None,
+                paged: Optional[dict] = None,
                 taps: Optional[dict] = None, tap_prefix: str = ""):
-    """Returns (y, new_cache, aux). mode: train|encode|prefill|decode."""
+    """Returns (y, new_cache, aux). mode: train|encode|prefill|decode.
+    `paged` carries block-table indices for paged caches (serve/kvcache.py)."""
     causal = mode != "encode"
     decode = mode == "decode"
     new_cache: dict = dict(cache) if cache is not None else None
@@ -74,21 +90,22 @@ def apply_block(cfg: ModelConfig, spec: LayerSpec, p: dict, x: jax.Array, *,
         if cfg.attention == "mla":
             y, nc = apply_mla(cfg, p["attn"], h, positions=positions,
                               cache=None if cache is None else cache["attn"],
-                              decode=decode, taps=taps,
+                              decode=decode, paged=paged, taps=taps,
                               tap_prefix=tap_prefix + "attn/")
         else:
             y, nc = apply_attention(
                 cfg, p["attn"], h, positions=positions, causal=causal,
                 window=cfg.attn_window,
                 cache=None if cache is None else cache["attn"],
-                taps=taps, tap_prefix=tap_prefix + "attn/")
+                paged=paged, taps=taps, tap_prefix=tap_prefix + "attn/")
         if new_cache is not None and nc is not None:
             new_cache["attn"] = nc
     else:
         y, nc = apply_mamba(cfg, p["mamba"], h,
                             cache=None if cache is None else cache["mamba"],
-                            decode=decode, taps=taps,
-                            tap_prefix=tap_prefix + "mamba/")
+                            decode=decode, positions=positions,
+                            slot=None if paged is None else paged.get("slots"),
+                            taps=taps, tap_prefix=tap_prefix + "mamba/")
         if new_cache is not None and nc is not None:
             new_cache["mamba"] = nc
     x = x + y
@@ -115,6 +132,18 @@ def apply_block(cfg: ModelConfig, spec: LayerSpec, p: dict, x: jax.Array, *,
         x = x + apply_mlp(cfg, p["mlp"], h2, taps, tap_prefix + "mlp/")
     elif spec.mlp == "moe":
         h2 = apply_norm(cfg, p["ln2"], x)
-        y2, aux = apply_moe(cfg, p["moe"], h2, taps, tap_prefix + "moe/")
+        # paged serving carries junk tokens that must not compete for
+        # expert capacity (see apply_moe): left-padding in prefill
+        # (pos = -1) and idle slots in decode (kv_len == 0). Unpaged modes
+        # never do — pass None so the shard_map MoE fast path stays
+        # available to them.
+        if paged is not None and mode == "prefill":
+            moe_valid = positions >= 0
+        elif paged is not None and mode == "decode" and "kv_len" in paged:
+            moe_valid = (paged["kv_len"] > 0)[:, None]
+        else:
+            moe_valid = None
+        y2, aux = apply_moe(cfg, p["moe"], h2, taps, tap_prefix + "moe/",
+                            valid=moe_valid)
         x = x + y2
     return x, new_cache, aux

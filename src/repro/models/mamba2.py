@@ -142,8 +142,17 @@ def _ssd_chunked(cfg, x, dt, a, bm, cm):
 
 def apply_mamba(cfg: ModelConfig, p: dict, u: jax.Array, *,
                 cache: Optional[dict] = None, decode: bool = False,
+                positions: Optional[jax.Array] = None,
+                slot: Optional[jax.Array] = None,
                 taps: Optional[dict] = None, tap_prefix: str = ""):
-    """u: (B, L, d_model). Returns (y, new_cache)."""
+    """u: (B, L, d_model). Returns (y, new_cache).
+
+    `positions` (B, L) marks left-padding with -1 (continuous-batching
+    prefill): padded steps are forced to dt=0 / x=0 so they neither move the
+    SSM state nor leak through the causal conv — a left-padded prompt yields
+    exactly the state of the unpadded one. `slot` ((B,) indices) routes a
+    prefill batch's final states into those rows of an (n_slots, ...) cache.
+    """
     m, di, h, conv_dim = _dims(cfg)
     b, l, _ = u.shape
     g, n, pdim = m.n_groups, m.d_state, m.head_dim
@@ -156,6 +165,10 @@ def apply_mamba(cfg: ModelConfig, p: dict, u: jax.Array, *,
     a = -jnp.exp(p["A_log"])                                     # (H,)
     dt = jax.nn.softplus(dt.astype(jnp.float32) +
                          p["dt_bias"][None, None, :])            # (B,L,H)
+    if positions is not None and not decode:
+        valid = positions >= 0                                   # (B, L)
+        xbc = xbc * valid[..., None].astype(xbc.dtype)
+        dt = dt * valid[..., None].astype(dt.dtype)
 
     new_cache = dict(cache) if cache is not None else None
     if decode:
@@ -178,7 +191,12 @@ def apply_mamba(cfg: ModelConfig, p: dict, u: jax.Array, *,
         new_cache["state"] = s
         new_cache["len"] = cache["len"] + 1
     else:
-        conv_state = cache["conv"] if cache is not None else None
+        # slot-prefill (paged serving): the request is fresh, so the conv
+        # starts from zero padding and the result lands in this slot's row
+        # of the (n_slots, ...) cache rather than replacing the whole batch
+        fresh = slot is not None
+        conv_state = cache["conv"] if (cache is not None and not fresh) \
+            else None
         xbc_f, conv_tail = _causal_conv(cfg, p, xbc, conv_state)
         x, bm, cm = jnp.split(xbc_f, [di, di + g * n], axis=-1)
         xh = lc(x.reshape(b, l, h, pdim), "batch", "seq", "ssm_heads", None)
@@ -187,7 +205,14 @@ def apply_mamba(cfg: ModelConfig, p: dict, u: jax.Array, *,
         y, final_state = _ssd_chunked(cfg, xh, dt, a, bmg, cmg)
         y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
         y = y.reshape(b, l, di).astype(u.dtype)
-        if new_cache is not None:
+        if new_cache is not None and fresh:
+            n_real = (jnp.sum(positions >= 0, axis=1).astype(jnp.int32)
+                      if positions is not None
+                      else jnp.full((b,), l, jnp.int32))
+            new_cache["state"] = cache["state"].at[slot].set(final_state)
+            new_cache["conv"] = cache["conv"].at[slot].set(conv_tail)
+            new_cache["len"] = cache["len"].at[slot].set(n_real)
+        elif new_cache is not None:
             new_cache["state"] = final_state
             new_cache["conv"] = conv_tail
             new_cache["len"] = cache["len"] + l

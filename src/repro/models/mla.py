@@ -16,10 +16,11 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import lc
 from repro.models.config import ModelConfig
-from repro.models.attention import attention_core, _cache_write
+from repro.models.attention import attention_core, _cache_write, _paged_update
 from repro.models.linear import dense, init_dense, materialize
 from repro.models.norms import apply_norm, init_norm
 from repro.models.rope import apply_rope
+from repro.serve.kvcache import PageSpec
 
 
 def init_mla(cfg: ModelConfig, key) -> dict:
@@ -49,6 +50,17 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     }
 
 
+def init_paged_mla_cache(cfg: ModelConfig, spec: PageSpec) -> dict:
+    """Page-pool latent cache (c_kv under "k_pool", k_pe under "v_pool")."""
+    m = cfg.mla
+    return {
+        "k_pool": jnp.zeros((spec.n_pages, spec.page_size, 1, m.kv_lora_rank),
+                            cfg.adtype),
+        "v_pool": jnp.zeros((spec.n_pages, spec.page_size, 1,
+                             m.qk_rope_head_dim), cfg.adtype),
+    }
+
+
 def _project_latent(cfg, p, x, positions):
     """Returns (c_kv normed, k_pe roped): (B,S,r), (B,S,rope)."""
     m = cfg.mla
@@ -73,8 +85,8 @@ def _queries(cfg, p, x, positions):
 
 def apply_mla(cfg: ModelConfig, p: dict, x: jax.Array, *,
               positions: jax.Array, cache: Optional[dict] = None,
-              decode: bool = False, taps: Optional[dict] = None,
-              tap_prefix: str = ""):
+              decode: bool = False, paged: Optional[dict] = None,
+              taps: Optional[dict] = None, tap_prefix: str = ""):
     """Returns (y, new_cache)."""
     m = cfg.mla
     b, s, d = x.shape
@@ -90,15 +102,24 @@ def apply_mla(cfg: ModelConfig, p: dict, x: jax.Array, *,
         taps[tap_prefix + "wukv"] = c_kv
 
     new_cache = cache
-    if cache is not None:
+    paged_view = None
+    if cache is not None and "k_pool" in cache:
+        new_cache, paged_view = _paged_update(
+            cache, c_kv[:, :, None, :], k_pe[:, :, None, :], positions, paged)
+    elif cache is not None:
         new_cache = _cache_write(cache, c_kv[:, :, None, :], k_pe[:, :, None, :],
                                  positions)
 
     if decode:
         assert cache is not None
-        ckv_all = new_cache["k"][:, :, 0, :]                     # (B, T, r)
-        kpe_all = new_cache["v"][:, :, 0, :]                     # (B, T, rope)
-        kv_pos = new_cache["pos"]
+        if paged_view is not None:
+            ckv_g, kpe_g, kv_pos = paged_view
+            ckv_all = ckv_g[:, :, 0, :]                          # (B, T, r)
+            kpe_all = kpe_g[:, :, 0, :]                          # (B, T, rope)
+        else:
+            ckv_all = new_cache["k"][:, :, 0, :]                 # (B, T, r)
+            kpe_all = new_cache["v"][:, :, 0, :]                 # (B, T, rope)
+            kv_pos = new_cache["pos"]
         wukv = materialize(p["wukv"]["w"], jnp.float32).reshape(
             m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
         wuk, wuv = wukv[:, :, :m.qk_nope_head_dim], wukv[:, :, m.qk_nope_head_dim:]

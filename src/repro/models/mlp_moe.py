@@ -70,12 +70,20 @@ def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
 
 
 def apply_moe(cfg: ModelConfig, p: dict, x: jax.Array,
-              taps: Optional[dict] = None, tap_prefix: str = ""):
-    """x: (B, S, d). Returns (y, aux_loss_scalar)."""
+              taps: Optional[dict] = None, tap_prefix: str = "",
+              valid: Optional[jax.Array] = None):
+    """x: (B, S, d). Returns (y, aux_loss_scalar).
+
+    `valid` (B, S) marks real tokens; False = left-padding (continuous-
+    batching prefill). Pad tokens are routed straight to the overflow bin so
+    they neither consume expert capacity nor shift real tokens' dispatch
+    positions — without this, junk pads can displace real tokens whenever
+    capacity binds.
+    """
     m = cfg.moe
     b, s, d = x.shape
 
-    if cfg.moe_impl == "shard_map" and taps is None:
+    if cfg.moe_impl == "shard_map" and taps is None and valid is None:
         from repro.core.quant.types import QuantizedTensor
         from repro.distributed.sharding import active_mesh
         mesh = active_mesh()
@@ -105,6 +113,8 @@ def apply_moe(cfg: ModelConfig, p: dict, x: jax.Array,
     # slot positions within each expert — sort-based (O(T·k) memory; the
     # one-hot/cumsum formulation is O(T·k·E) and blows up at pod scale)
     flat_idx = idx.reshape(t * k)
+    if valid is not None:
+        flat_idx = jnp.where(jnp.repeat(valid.reshape(t), k), flat_idx, e)
     order = jnp.argsort(flat_idx, stable=True)
     sorted_e = flat_idx[order]
     starts = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")

@@ -53,15 +53,19 @@ def init_lm(cfg: ModelConfig, key) -> dict:
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               enc_len: int = 0) -> dict:
+               enc_len: int = 0, paged=None) -> dict:
+    """`paged`: a serve.kvcache.PageSpec — build page-pool caches for the
+    continuous-batching engine (`batch` is then the slot count)."""
     cache: dict = {}
     if cfg.prefix_pattern:
         cache["prefix"] = {
-            str(i): init_block_cache(cfg, spec, batch, max_len, enc_len)
+            str(i): init_block_cache(cfg, spec, batch, max_len, enc_len,
+                                     paged=paged)
             for i, spec in enumerate(cfg.prefix_pattern)}
     cache["stack"] = {}
     for j, spec in enumerate(cfg.pattern):
-        one = init_block_cache(cfg, spec, batch, max_len, enc_len)
+        one = init_block_cache(cfg, spec, batch, max_len, enc_len,
+                               paged=paged)
         cache["stack"][f"p{j}"] = jax.tree.map(
             lambda x: jnp.broadcast_to(
                 x[None], (cfg.n_repeats,) + x.shape).copy() if hasattr(
@@ -125,8 +129,11 @@ def _embed(cfg: ModelConfig, params: dict, tokens: jax.Array,
 
 def _run_stack(cfg: ModelConfig, params: dict, x: jax.Array, *,
                positions: jax.Array, mode: str, cache: Optional[dict],
-               enc_out: Optional[jax.Array] = None):
-    """Prefix blocks then scanned pattern repeats. Returns (x, new_cache, aux)."""
+               enc_out: Optional[jax.Array] = None,
+               paged: Optional[dict] = None):
+    """Prefix blocks then scanned pattern repeats. Returns (x, new_cache, aux).
+    `paged` (block-table indices) is loop-invariant across layers — each
+    block's page pool is indexed by the same per-slot tables."""
     aux_total = jnp.zeros((), jnp.float32)
     new_cache: dict = {} if cache is not None else None
 
@@ -134,7 +141,7 @@ def _run_stack(cfg: ModelConfig, params: dict, x: jax.Array, *,
         c = cache["prefix"][str(i)] if cache is not None else None
         x, nc, aux = apply_block(cfg, spec, params["prefix"][str(i)], x,
                                  positions=positions, mode=mode, cache=c,
-                                 enc_out=enc_out)
+                                 enc_out=enc_out, paged=paged)
         aux_total += aux
         if cache is not None:
             new_cache.setdefault("prefix", {})[str(i)] = nc
@@ -151,7 +158,7 @@ def _run_stack(cfg: ModelConfig, params: dict, x: jax.Array, *,
             x, nc, aux = apply_block(
                 cfg, spec, slices[j], x, positions=positions, mode=mode,
                 cache=cslices[j] if cslices is not None else None,
-                enc_out=enc_out)
+                enc_out=enc_out, paged=paged)
             aux_sum += aux
             ncs.append(nc)
         return x, tuple(ncs), aux_sum
@@ -222,24 +229,37 @@ def lm_forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
 
 
 def lm_prefill(cfg: ModelConfig, params: dict, tokens: jax.Array, cache: dict,
-               ext_embeds: Optional[jax.Array] = None):
-    """Prompt ingestion. Returns (last-token logits (B, V), new_cache)."""
+               ext_embeds: Optional[jax.Array] = None,
+               positions: Optional[jax.Array] = None,
+               paged: Optional[dict] = None):
+    """Prompt ingestion. Returns (last-token logits (B, V), new_cache).
+
+    `positions` (B, S) overrides the default arange for continuous batching:
+    left-padded prompts mark pads with -1 (masked everywhere, routed to the
+    scratch page) so the real last token stays at index -1. `paged` carries
+    the target slot's block-table row (serve/kvcache.py).
+    """
     b = tokens.shape[0]
     s = tokens.shape[1] + (ext_embeds.shape[1] if ext_embeds is not None else 0)
-    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
     x = _embed(cfg, params, tokens, ext_embeds, positions)
     x, new_cache, _ = _run_stack(cfg, params, x, positions=positions,
-                                 mode="prefill", cache=cache)
+                                 mode="prefill", cache=cache, paged=paged)
     logits = _head(cfg, params, x[:, -1:, :])
     return logits[:, 0, :], new_cache
 
 
 def lm_decode(cfg: ModelConfig, params: dict, tokens: jax.Array,
-              cache: dict, positions: jax.Array):
-    """One decode step. tokens: (B, 1); positions: (B, 1) absolute."""
+              cache: dict, positions: jax.Array,
+              paged: Optional[dict] = None):
+    """One decode step. tokens: (B, 1); positions: (B, 1) absolute. With a
+    paged cache, B is the slot count and `paged` holds per-slot write
+    targets plus the block tables for gather-based reads."""
     x = _embed(cfg, params, tokens, None, positions)
     x, new_cache, _ = _run_stack(cfg, params, x, positions=positions,
-                                 mode="decode", cache=cache)
+                                 mode="decode", cache=cache, paged=paged)
     logits = _head(cfg, params, x)
     return logits[:, 0, :], new_cache
 

@@ -1,20 +1,28 @@
-"""Batched serving engine for (quantized) LMs.
+"""Serving engines for (quantized) LMs.
 
-Static-batch engine with jitted prefill and decode steps; weights may be
-float or packed QuantizedTensor (the paper's deployment format — dequant
-happens inside the fused Pallas matmul on TPU). Exposes:
+Weights may be float or packed QuantizedTensor (the paper's deployment
+format — dequant happens inside the fused Pallas matmul on TPU). Two
+engines share the model code:
 
-  * generate(prompts)       — batched prefill + greedy/sampled decode
-  * score(tokens)           — teacher-forced log-likelihoods
+  * ServeEngine        — static batch: one prompt length, lockstep decode to
+                         max_new. Kept as the baseline and for scoring.
+  * ContinuousEngine   — continuous batching over a fixed slot pool with a
+                         paged KV cache (serve/kvcache.py): requests are
+                         admitted into free slots as others retire, each
+                         slot decodes at its own depth, and finished
+                         requests stop burning decode FLOPs. All jitted
+                         shapes are static (slot count, page pool, bucketed
+                         prefill lengths), so steady-state serving never
+                         recompiles.
 
-Continuous batching at pod scale is driven by launch/serve.py; this module
-is the single-replica execution core.
+The traffic driver (Poisson arrivals, latency percentiles) lives in
+launch/serve.py; admission policy lives in serve/scheduler.py.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +31,9 @@ import numpy as np
 from repro.models.config import ModelConfig
 from repro.models.transformer import (init_cache, lm_decode, lm_forward,
                                       lm_prefill)
-from repro.serve.sampling import sample
+from repro.serve.kvcache import PagePool, PageSpec, default_page_spec
+from repro.serve.sampling import sample, sample_np
+from repro.serve.scheduler import Request, Scheduler
 
 
 @dataclasses.dataclass
@@ -80,3 +90,273 @@ class ServeEngine:
         ll = jnp.take_along_axis(logits, toks[:, 1:][..., None],
                                  axis=-1)[..., 0]
         return np.asarray(ll - lse)
+
+
+# ------------------------------------------------------- continuous batching
+
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnames=("cache",))
+def _paged_prefill_jit(cfg, params, tokens, cache, positions, paged):
+    return lm_prefill(cfg, params, tokens, cache, positions=positions,
+                      paged=paged)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "k_steps", "page_size",
+                                    "temperature", "top_k"),
+                   donate_argnames=("cache",))
+def _paged_decode_scan_jit(cfg, params, cache, last_tok, cur_len, active,
+                           block_table, key, *, k_steps, page_size,
+                           temperature, top_k):
+    """K fused decode steps over all slots with on-device sampling.
+
+    One dispatch and one host sync per K tokens — the per-step Python/
+    transfer overhead of a step-at-a-time loop would otherwise rival the
+    model compute. Slots whose request finishes mid-block keep stepping;
+    their extra writes fall off the block table onto the scratch page and
+    the host drops the surplus tokens. Returns ((K, S) tokens, cache).
+    """
+    n_slots, max_pages = block_table.shape
+    sl = jnp.arange(n_slots)
+
+    def body(carry, _):
+        cache, tok, clen, key = carry
+        key, sk = jax.random.split(key)
+        page_idx = jnp.clip(clen // page_size, 0, max_pages - 1)
+        paged = {
+            "block_table": block_table,
+            "write_page": jnp.where(
+                active, jnp.maximum(block_table[sl, page_idx], 0), 0),
+            "write_off": jnp.where(active, clen % page_size, 0),
+            "kv_len": jnp.where(active, clen + 1, 0),
+        }
+        pos = jnp.where(active, clen, 0)[:, None]
+        logits, cache = lm_decode(cfg, params, tok[:, None], cache, pos,
+                                  paged=paged)
+        nxt = sample(logits, sk, temperature=temperature, top_k=top_k)
+        tok = jnp.where(active, nxt, tok)
+        clen = clen + active.astype(clen.dtype)
+        return (cache, tok, clen, key), nxt
+
+    (cache, _, _, _), toks = jax.lax.scan(
+        body, (cache, last_tok, cur_len, key), None, length=k_steps)
+    return toks, cache
+
+
+class ContinuousEngine:
+    """Slot-stepping execution core for continuous batching.
+
+    Holds the paged cache, the per-slot host state (fill depth, last token),
+    and the jitted prefill/decode steps. Admission policy and request
+    bookkeeping are delegated to serve/scheduler.py. One `step()`:
+
+      1. retire-then-admit: the scheduler maps queued requests onto free
+         slots (whole-budget page allocation, FIFO);
+      2. newly admitted requests are prefilled into their slots — jitted
+         calls batched per prompt-length bucket (pow2 batch sizes, capped
+         at `prefill_batch`) that scatter K/V into the admitted slots'
+         pages while every other slot's cache state is untouched;
+      3. one fused block of `decode_block` lockstep decode steps over all
+         slots (a device-side lax.scan with on-device sampling — one
+         dispatch and one host sync per K tokens). Idle slots write to the
+         scratch page and are masked; slots finishing mid-block overshoot
+         onto the scratch page and the surplus tokens are dropped.
+
+    `prefill_bucket` trades compile count for pad waste: prompts are
+    left-padded (pos = -1, masked everywhere) up to the next multiple.
+    Bucket 1 reproduces the static engine's unpadded prefill bit-for-bit.
+    `decode_block` trades admission latency (new arrivals wait for the
+    current block) against per-token dispatch overhead.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
+                 max_len: int = 512, page_size: int = 16,
+                 n_pages: Optional[int] = None, eos_id: int = -1,
+                 prefill_bucket: int = 16, prefill_batch: int = 8,
+                 decode_block: int = 8,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0):
+        if cfg.enc_dec:
+            raise NotImplementedError("paged serving covers decoder-only LMs")
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.eos_id = eos_id
+        self.prefill_bucket = max(1, prefill_bucket)
+        # prefill_batch=1 avoids co-batched prefills entirely: capacity-MoE
+        # routing is cross-token, so co-batched requests can perturb each
+        # other's expert assignment when capacity binds (see DESIGN.md)
+        self.prefill_batch = max(1, prefill_batch)
+        self.decode_block = max(1, decode_block)
+        self.temperature = temperature
+        self.top_k = top_k
+        if n_pages is None:
+            self.spec = default_page_spec(n_slots, max_len, page_size)
+        else:
+            self.spec = PageSpec(n_pages=n_pages, page_size=page_size,
+                                 max_pages=-(-max_len // page_size))
+        self.pool = PagePool(self.spec, n_slots)
+        self.sched = Scheduler(n_slots, self.pool)
+        self.cache = init_cache(cfg, n_slots, self.spec.max_len,
+                                paged=self.spec)
+        self.cur_len = np.zeros(n_slots, np.int64)   # tokens in cache per slot
+        self.last_tok = np.zeros(n_slots, np.int64)  # next token to feed
+        self.active = np.zeros(n_slots, bool)
+        self._rng = np.random.default_rng(seed)
+        self._key = jax.random.PRNGKey(seed)
+        self._next_rid = 0
+        self.n_decode_steps = 0
+        self.n_prefills = 0
+
+    # ------------------------------------------------------------- intake
+    def submit(self, prompt: np.ndarray, *, max_new: int = 32,
+               arrival: float = 0.0) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size + max_new > self.spec.max_len:
+            raise ValueError(
+                f"request budget {prompt.size + max_new} exceeds per-slot "
+                f"capacity {self.spec.max_len}")
+        need = self.spec.pages_for(prompt.size + max_new)
+        if need > self.spec.n_pages - 1:
+            # an under-provisioned pool could otherwise head-of-line block
+            # this request forever (admission waits for pages that can
+            # never all be free at once)
+            raise ValueError(
+                f"request needs {need} pages but the pool only has "
+                f"{self.spec.n_pages - 1} allocatable pages")
+        req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new,
+                      arrival=arrival)
+        self._next_rid += 1
+        self.sched.submit(req)
+        return req
+
+    # ------------------------------------------------------------ serving
+    def step(self, now: float = 0.0) -> bool:
+        """One scheduler tick: admit + prefill new requests (batched by
+        prompt bucket), then run one fused block of decode steps over all
+        slots. Returns False when there was nothing to do."""
+        did = False
+        admits = self.sched.admit(now)
+        groups: dict[int, list] = {}
+        for slot, req in admits:
+            groups.setdefault(self._bucket(req.n_prompt), []).append(
+                (slot, req))
+        for padded, items in sorted(groups.items()):
+            did = True
+            i = 0
+            while i < len(items):
+                # pow2 chunk sizes bound the number of compiled shapes
+                size = min(1 << ((len(items) - i).bit_length() - 1),
+                           self.prefill_batch)
+                chunk = items[i:i + size]
+                i += size
+                logits = self._prefill(chunk, padded)
+                for row, (slot, req) in enumerate(chunk):
+                    tok = sample_np(logits[row], self._rng,
+                                    temperature=self.temperature,
+                                    top_k=self.top_k)
+                    self._emit(slot, req, tok, now)
+        act = np.nonzero(self.active)[0]
+        if act.size:
+            did = True
+            toks = self._decode_block()                       # (K, n_slots)
+            for t in range(toks.shape[0]):
+                for slot in act:
+                    req = self.sched.slots[slot]
+                    if req is not None:                       # not yet retired
+                        self._emit(slot, req, int(toks[t, slot]), now)
+        return did
+
+    def run(self, *, clock=None, max_steps: Optional[int] = None):
+        """Drain every submitted request; returns the requests that finished
+        during this call, in submit order.
+
+        `clock`: callable giving the current time for arrival gating and
+        latency stamps (wall-clock driver); default is a virtual step
+        counter, so `arrival` is then measured in scheduler steps.
+        """
+        import time as _time
+
+        t = 0
+        while not self.sched.all_done():
+            if max_steps is not None and t >= max_steps:
+                raise RuntimeError(f"serve loop exceeded {max_steps} steps")
+            now = clock() if clock is not None else float(t)
+            did = self.step(now)
+            if did or clock is None:
+                # virtual time must tick even when idle (arrival gating),
+                # but under a wall clock an idle spin would burn CPU and
+                # exhaust max_steps between sparse arrivals — sleep instead
+                t += 1
+            else:
+                _time.sleep(1e-3)
+        return sorted(self.sched.drain_finished(), key=lambda r: r.rid)
+
+    # ----------------------------------------------------------- internals
+    def _bucket(self, n: int) -> int:
+        b = self.prefill_bucket
+        return -(-n // b) * b
+
+    def _prefill(self, chunk: Sequence[tuple[int, Request]],
+                 padded: int) -> np.ndarray:
+        """Prefill a same-bucket batch of admitted (slot, request) pairs.
+        Returns (B, V) last-token logits."""
+        batch = len(chunk)
+        toks = np.zeros((batch, padded), np.int32)
+        pos = np.full((batch, padded), -1, np.int32)
+        for row, (slot, req) in enumerate(chunk):
+            length = req.n_prompt
+            toks[row, padded - length:] = req.prompt
+            pos[row, padded - length:] = np.arange(length, dtype=np.int32)
+        slots = np.asarray([slot for slot, _ in chunk], np.int32)
+        paged = {"bt_rows": jnp.asarray(self.pool.tables[slots]),
+                 "slots": jnp.asarray(slots)}
+        logits, self.cache = _paged_prefill_jit(
+            self.cfg, self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(pos), paged)
+        for slot, req in chunk:
+            self.cur_len[slot] = req.n_prompt
+            self.active[slot] = True
+        self.n_prefills += 1
+        return np.asarray(logits)
+
+    def _decode_block(self) -> np.ndarray:
+        """One fused block of decode steps; returns (K, n_slots) tokens.
+
+        K adapts to the smallest remaining budget among active requests
+        (pow2-capped at decode_block) so slots retire exactly at a block
+        boundary instead of idling through overshoot steps."""
+        act = self.active.copy()
+        self._key, sk = jax.random.split(self._key)
+        remaining = min(req.max_new - len(req.tokens)
+                        for req in self.sched.slots if req is not None)
+        k_steps = min(self.decode_block,
+                      1 << (max(remaining, 1).bit_length() - 1))
+        # bucket the attention read width (pow2 pages over the deepest slot
+        # at block end) so shallow traffic doesn't pay max_len-wide gathers
+        ps, maxp = self.spec.page_size, self.spec.max_pages
+        deepest = int(self.cur_len[act].max()) + k_steps
+        need = -(-deepest // ps)
+        width = 1
+        while width < need:
+            width *= 2
+        width = min(width, maxp)
+        toks, self.cache = _paged_decode_scan_jit(
+            self.cfg, self.params, self.cache,
+            jnp.asarray(self.last_tok.astype(np.int32)),
+            jnp.asarray(self.cur_len.astype(np.int32)),
+            jnp.asarray(act),
+            jnp.asarray(np.ascontiguousarray(self.pool.tables[:, :width])),
+            sk, k_steps=k_steps, page_size=self.spec.page_size,
+            temperature=self.temperature, top_k=self.top_k)
+        self.cur_len[act] += k_steps
+        self.n_decode_steps += k_steps
+        return np.asarray(toks)
+
+    def _emit(self, slot: int, req: Request, tok: int, now: float) -> None:
+        if req.first_token_at is None:
+            req.first_token_at = now
+        req.tokens.append(tok)
+        self.last_tok[slot] = tok
+        if len(req.tokens) >= req.max_new or tok == self.eos_id:
+            self.active[slot] = False
+            self.sched.retire(slot, now)

@@ -1,0 +1,135 @@
+"""Paged KV cache: fixed page pool + per-slot block tables.
+
+Replaces the dense ``(B, max_len, ...)`` decode cache with a pool of
+fixed-size pages shared by all serving slots. Each slot owns a block table —
+a row of page indices — and attention reads gather the slot's pages back
+into a contiguous ``(S, n_pages_read * page_size, ...)`` view. Because a
+slot's cache is always the contiguous positions ``0..len-1`` (prompt then
+decoded tokens), the position mask is derived from the per-slot fill count
+alone — no position pool is stored, and recycled pages need no
+invalidation: stale entries beyond ``len`` are masked by construction.
+
+All shapes are compile-time constants (pool size, page size, table width),
+so the jitted prefill/decode steps never recompile as requests come and go;
+the engine buckets the *read* width (pow2 pages over the deepest live slot)
+so shallow traffic doesn't pay full-depth attention.
+
+Page 0 is a reserved scratch page: idle slots (and padded prompt positions)
+write there, and nothing ever reads it. The allocator itself is host-side
+(`PagePool`); only the gather/scatter helpers below run under jit.
+
+Layering note: repro.models.{attention,mla,blocks} import this module, so
+it must stay dependency-free — importing anything from repro.models (or
+repro.serve.engine) here would create a package cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+SCRATCH_PAGE = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PageSpec:
+    """Compile-time geometry of the page pool."""
+
+    n_pages: int          # total pages, including the reserved scratch page
+    page_size: int        # tokens per page
+    max_pages: int        # block-table width (pages a single slot may hold)
+
+    @property
+    def max_len(self) -> int:
+        return self.max_pages * self.page_size
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+
+def default_page_spec(n_slots: int, max_len: int,
+                      page_size: int = 16) -> PageSpec:
+    """Fully-provisioned pool: every slot can hold max_len tokens."""
+    max_pages = -(-max_len // page_size)
+    return PageSpec(n_pages=1 + n_slots * max_pages, page_size=page_size,
+                    max_pages=max_pages)
+
+
+class PagePool:
+    """Host-side page allocator and per-slot block tables.
+
+    Pages are owned by exactly one slot from admission to retirement, so
+    device-side scatters never collide (idle slots all target the scratch
+    page, whose contents are never read).
+    """
+
+    def __init__(self, spec: PageSpec, n_slots: int):
+        self.spec = spec
+        self.n_slots = n_slots
+        self._free = list(range(spec.n_pages - 1, SCRATCH_PAGE, -1))
+        self.tables = np.full((n_slots, spec.max_pages), -1, np.int32)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n_tokens: int) -> bool:
+        return self.spec.pages_for(n_tokens) <= len(self._free)
+
+    def alloc(self, slot: int, n_tokens: int) -> None:
+        """Give `slot` enough pages for n_tokens. Caller checks can_alloc."""
+        need = self.spec.pages_for(n_tokens)
+        if need > len(self._free):
+            raise RuntimeError(f"page pool exhausted: need {need}, "
+                               f"free {len(self._free)}")
+        if need > self.spec.max_pages:
+            raise ValueError(f"request needs {need} pages > block-table "
+                             f"width {self.spec.max_pages}")
+        assert np.all(self.tables[slot] == -1), f"slot {slot} already mapped"
+        pages = [self._free.pop() for _ in range(need)]
+        self.tables[slot, :need] = pages
+
+    def release(self, slot: int) -> None:
+        """Return all of `slot`'s pages to the free list."""
+        held = self.tables[slot]
+        self._free.extend(int(p) for p in held if p >= 0)
+        self.tables[slot] = -1
+
+
+# ------------------------------------------------------------- jit helpers
+
+def gather_pages(pool: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
+    """pool: (P, ps, ...); block_table: (S, maxp) -> (S, maxp*ps, ...)."""
+    s, mp = block_table.shape
+    ps = pool.shape[1]
+    out = pool[jnp.maximum(block_table, 0)]            # (S, maxp, ps, ...)
+    return out.reshape((s, mp * ps) + pool.shape[2:])
+
+
+def contiguous_positions(kv_len: jnp.ndarray, width: int) -> jnp.ndarray:
+    """kv_len: (S,) per-slot fill counts -> (S, width) positions, -1 beyond.
+
+    Paged slots always hold positions 0..len-1 contiguously, so the mask
+    positions are a function of the fill count, not stored state."""
+    ar = jnp.arange(width, dtype=jnp.int32)[None, :]
+    return jnp.where(ar < kv_len[:, None], ar, -1)
+
+
+def prefill_page_index(bt_rows: jnp.ndarray, positions: jnp.ndarray,
+                       page_size: int):
+    """Map a prefill batch's prompt positions to (page, offset) indices.
+
+    bt_rows: (B, maxp) the admitted slots' block tables; positions: (B, L)
+    absolute positions, -1 for left padding. Pads route to the scratch
+    page. Returns (B, L) pages and offsets.
+    """
+    valid = positions >= 0
+    idx = jnp.clip(jnp.where(valid, positions, 0) // page_size, 0,
+                   bt_rows.shape[1] - 1)
+    pages = jnp.where(valid,
+                      jnp.maximum(jnp.take_along_axis(bt_rows, idx, axis=1),
+                                  0),
+                      SCRATCH_PAGE)
+    offs = jnp.where(valid, positions % page_size, 0)
+    return pages, offs

@@ -1,8 +1,26 @@
-"""Token sampling strategies for the serving engine."""
+"""Token sampling strategies for the serving engines."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+def sample_np(logits: np.ndarray, rng: np.random.Generator, *,
+              temperature: float = 0.0, top_k: int = 0) -> int:
+    """Host-side sampling of a single (V,) logits row.
+
+    The continuous engine samples per slot on the host between decode
+    dispatches; numpy keeps this off the device critical path.
+    """
+    if temperature <= 0.0:
+        return int(np.argmax(logits))
+    logits = logits.astype(np.float64) / temperature
+    if top_k > 0:
+        kth = np.partition(logits, -top_k)[-top_k]
+        logits = np.where(logits < kth, -1e30, logits)
+    gumbel = -np.log(-np.log(rng.uniform(1e-12, 1.0, logits.shape)))
+    return int(np.argmax(logits + gumbel))
 
 
 def sample(logits: jax.Array, key, *, temperature: float = 1.0,

@@ -1,0 +1,115 @@
+"""Continuous-batching scheduler: admission queue + slot/page bookkeeping.
+
+Holds per-request state (prompt, emitted tokens, done, timing) and decides
+which queued request enters which slot. Admission is FIFO with head-of-line
+blocking: a request is admitted only when a slot is free AND the page pool
+can cover its whole budget (prompt + max_new tokens), so a running request
+can never hit pool exhaustion mid-decode. Pages return to the pool the
+moment a request retires.
+
+This module is model-free — the execution core (jitted prefill/decode over
+the paged cache) lives in serve/engine.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.kvcache import PagePool
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its lifecycle state."""
+
+    rid: int
+    prompt: np.ndarray              # (L,) int32
+    max_new: int
+    arrival: float = 0.0
+    # lifecycle (filled by the scheduler/engine)
+    tokens: list = dataclasses.field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+    admitted_at: Optional[float] = None
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+    @property
+    def n_prompt(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def budget(self) -> int:
+        """Worst-case tokens this request may occupy in the cache."""
+        return self.n_prompt + self.max_new
+
+
+class Scheduler:
+    """Admission queue over a fixed slot pool backed by a PagePool."""
+
+    def __init__(self, n_slots: int, pool: PagePool):
+        self.n_slots = n_slots
+        self.pool = pool
+        self._pending: list[Request] = []     # submitted, arrival in future
+        self.queue: deque[Request] = deque()  # arrived, waiting for a slot
+        self.slots: list[Optional[Request]] = [None] * n_slots
+        self._retired: list[Request] = []
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request) -> None:
+        self._pending.append(req)
+        self._pending.sort(key=lambda r: r.arrival)
+
+    def _ingest(self, now: float) -> None:
+        while self._pending and self._pending[0].arrival <= now:
+            self.queue.append(self._pending.pop(0))
+
+    # ---------------------------------------------------------- admission
+    def admit(self, now: float = 0.0) -> list[tuple[int, Request]]:
+        """Admit FIFO requests into free slots while pages last."""
+        self._ingest(now)
+        out = []
+        free = [s for s, r in enumerate(self.slots) if r is None]
+        while self.queue and free:
+            req = self.queue[0]
+            if not self.pool.can_alloc(req.budget):
+                break                         # head-of-line blocks on pages
+            self.queue.popleft()
+            slot = free.pop(0)
+            self.pool.alloc(slot, req.budget)
+            self.slots[slot] = req
+            req.slot = slot
+            req.admitted_at = now
+            out.append((slot, req))
+        return out
+
+    def retire(self, slot: int, now: float = 0.0) -> None:
+        req = self.slots[slot]
+        assert req is not None
+        self.pool.release(slot)
+        self.slots[slot] = None
+        req.done = True
+        req.finished_at = now
+        req.slot = -1
+        self._retired.append(req)
+
+    # ------------------------------------------------------------- status
+    def active_slots(self) -> list[int]:
+        return [s for s, r in enumerate(self.slots) if r is not None]
+
+    def all_done(self) -> bool:
+        return (not self._pending and not self.queue
+                and all(r is None for r in self.slots))
+
+    @property
+    def finished(self) -> list[Request]:
+        return list(self._retired)
+
+    def drain_finished(self) -> list[Request]:
+        """Pop everything retired since the last drain (engine.run uses this
+        so back-to-back drains don't re-report earlier batches)."""
+        out, self._retired = self._retired, []
+        return out
