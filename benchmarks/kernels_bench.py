@@ -4,6 +4,15 @@ On CPU the Pallas kernel runs in interpret mode (not representative), so the
 timed comparison is ref-vs-ref at different bit widths; the derived column
 reports the *modeled* TPU v5e HBM-traffic advantage of the packed format
 (weight bytes are the decode-time bottleneck for weight-only PTQ serving).
+
+Three kernel families (see DESIGN.md "Quantized serving fast paths"):
+
+  * dense dequant matmul          — (M, K) x packed (K, N)
+  * expert-batched dequant matmul — (E, C, K) x stacked packed (E, K, N);
+    the ref baseline column times the old path (dequantize the full float
+    expert stack, then einsum) the kernel removes
+  * W8A8 int8 matmul              — per-token int8 activations x packed
+    weights on the int8 MXU; the model adds the 2x int8-vs-bf16 MXU rate
 """
 from __future__ import annotations
 
@@ -12,10 +21,12 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant.types import quantize
+from repro.core.quant.types import (dequantize, quantize, quantize_activation,
+                                    quantize_stacked)
 from repro.kernels import ref
 
 HBM_BW = 819e9
+MXU_INT8_RATE = 2.0                    # int8 MXU throughput vs bf16 (v5e)
 
 
 def _time(fn, *args, reps=5):
@@ -49,6 +60,49 @@ def run(rows: list):
         rows.append((f"kernels/dequant_matmul_w{bits}_{m}x{k}x{n}", t * 1e6,
                      f"bytes={wbytes};modeled_tpu_decode_speedup="
                      f"{speedup:.2f}x"))
+
+    # ---- expert-batched: stacked packed slabs vs float-stack einsum ----
+    e, c, ke, ne = 8, 32, 1024, 1024
+    xe = jax.random.normal(jax.random.PRNGKey(2), (e, c, ke), jnp.float32)
+    we = jax.random.normal(jax.random.PRNGKey(3), (e, ke, ne)) * 0.05
+    for bits, gs in [(4, 128), (2, 64)]:
+        qte = quantize_stacked(we, bits, gs)
+        fused = jax.jit(lambda xx, qw=qte.qw, sc=qte.scale:
+                        ref.expert_dequant_matmul_ref(xx, qw, sc, bits=bits,
+                                                      group_size=gs, k=ke))
+        stack = jax.jit(lambda xx, qt_=qte: jnp.einsum(
+            "eck,ekn->ecn", xx.astype(jnp.bfloat16),
+            dequantize(qt_, jnp.bfloat16),
+            preferred_element_type=jnp.float32))
+        t_fused = _time(fused, xe)
+        t_stack = _time(stack, xe)
+        wbytes = qte.nbytes()
+        speedup = (e * ke * ne * 2) / wbytes
+        rows.append((f"kernels/expert_dequant_w{bits}_{e}x{c}x{ke}x{ne}",
+                     t_fused * 1e6,
+                     f"bytes={wbytes};float_stack_ref_us={t_stack * 1e6:.0f};"
+                     f"modeled_tpu_decode_speedup={speedup:.2f}x"))
+
+    # ---- W8A8: int8 MXU path (per-token activation scales) ----
+    for bits in (8, 4):
+        qt8 = quantize(w, bits, -1, act_bits=8)
+        xq, xs = quantize_activation(x, 8)
+
+        def w8a8(xx_q, xx_s, qw=qt8.qw, sc=qt8.scale, b=bits):
+            return ref.w8a8_matmul_ref(xx_q, qw, sc, bits=b, group_size=-1,
+                                       k=k) * xx_s
+
+        t8 = _time(jax.jit(w8a8), xq, xs)
+        wbytes = qt8.nbytes()
+        # two regimes, modeled separately: decode is weight-bytes-bound
+        # (packed traffic advantage; the MXU rate doesn't matter there),
+        # prefill is compute-bound (int8 MXU rate vs bf16)
+        decode_speedup = (k * n * 2) / wbytes
+        rows.append((f"kernels/w8a8_matmul_w{bits}a8_{m}x{k}x{n}", t8 * 1e6,
+                     f"bytes={wbytes};modeled_tpu_decode_speedup="
+                     f"{decode_speedup:.2f}x;"
+                     f"modeled_tpu_prefill_mxu_speedup="
+                     f"{MXU_INT8_RATE:.1f}x"))
     return rows
 
 

@@ -1,0 +1,135 @@
+"""Quantized-vs-float continuous-batching serving comparison + the
+expert/W8A8 kernel microbench rows, recorded to BENCH_quant_serve.json.
+
+The serving model is a MoE variant of the tiny decoder, so the W4 run
+exercises every quantized fast path the serving stack dispatches to:
+dense packed linears (attention projections), the stacked packed expert
+layout, and decode-shaped skinny-M calls (M = n_slots each step).
+
+On CPU the measured numbers run the jnp reference dispatch (dequantize +
+einsum — quantization *costs* time here); the modeled columns carry the
+TPU story, where decode is weight-bytes-bound and packed weights cut HBM
+traffic by 8/bits (see kernels_bench.py for the per-kernel model).
+
+    PYTHONPATH=src:. python benchmarks/quant_serve_bench.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import kernels_bench
+from repro.configs import TINY
+from repro.models.config import LayerSpec, MoEConfig
+from repro.models.transformer import init_lm
+from repro.serve.engine import ContinuousEngine
+from repro.utils.tree import tree_size_bytes
+
+N_SLOTS = 4
+N_REQUESTS = 8
+N_REPS = 3
+QUANT_BITS = 4
+QUANT_GROUP = 32
+OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "BENCH_quant_serve.json")
+
+
+def make_cfg():
+    return TINY.replace(
+        d_model=256, head_dim=64, d_ff=768, n_repeats=4,
+        pattern=(LayerSpec(kind="attn", mlp="moe"),),
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=384,
+                      capacity_factor=1.25))
+
+
+def make_workload(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, cfg.vocab_size, int(rng.choice([8, 16, 32]))),
+             int(rng.choice([8, 16, 24]))) for _ in range(N_REQUESTS)]
+
+
+def make_engine(cfg, params, **quant_kw):
+    return ContinuousEngine(cfg, params, n_slots=N_SLOTS, max_len=64,
+                            page_size=16, prefill_bucket=8, **quant_kw)
+
+
+def serve_rep(eng, work):
+    for prompt, max_new in work:
+        eng.submit(prompt, max_new=max_new, arrival=0.0)
+    t0 = time.time()
+    done = eng.run(clock=lambda: time.time() - t0, max_steps=1_000_000)
+    dt = time.time() - t0
+    useful = sum(len(r.tokens) for r in done)
+    return {"tok_s": useful / dt, "wall_s": dt, "useful_tokens": useful}
+
+
+def run(rows=None):
+    cfg = make_cfg()
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    work = make_workload(cfg)
+
+    engines = {
+        "float": make_engine(cfg, params),
+        f"w{QUANT_BITS}g{QUANT_GROUP}": make_engine(
+            cfg, params, quant_bits=QUANT_BITS, quant_group=QUANT_GROUP),
+    }
+    weight_bytes = {name: tree_size_bytes(eng.params)
+                    for name, eng in engines.items()}
+
+    for eng in engines.values():                     # warm every jit shape
+        serve_rep(eng, work)
+    results = {name: None for name in engines}
+    for _ in range(N_REPS):
+        for name, eng in engines.items():
+            r = serve_rep(eng, work)
+            if results[name] is None or r["tok_s"] > results[name]["tok_s"]:
+                results[name] = r
+
+    qname = f"w{QUANT_BITS}g{QUANT_GROUP}"
+    # reuse kernel timings if the 'kernels' suite already ran in this sweep
+    # (benchmarks/run.py shares one rows list); only standalone runs re-time
+    kernel_rows = [r for r in (rows or [])
+                   if str(r[0]).startswith("kernels/")]
+    if not kernel_rows:
+        kernels_bench.run(kernel_rows)
+    out = {
+        "workload": {"n_requests": N_REQUESTS, "n_slots": N_SLOTS,
+                     "quant_bits": QUANT_BITS, "quant_group": QUANT_GROUP,
+                     "arch": "tiny-moe-4e-top2"},
+        "serving": {
+            **{name: results[name] for name in engines},
+            "quant_over_float_measured_cpu":
+                results[qname]["tok_s"] / results["float"]["tok_s"],
+            "weight_bytes": weight_bytes,
+            # decode-time model: weight-bytes-bound on TPU
+            "modeled_tpu_decode_speedup":
+                weight_bytes["float"] / weight_bytes[qname],
+        },
+        "kernels": [{"name": n, "time_us": t, "derived": d}
+                    for n, t, d in kernel_rows],
+    }
+    with open(OUT, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"float {results['float']['tok_s']:8.1f} tok/s   "
+          f"{qname} {results[qname]['tok_s']:8.1f} tok/s  "
+          f"(measured CPU ratio "
+          f"{out['serving']['quant_over_float_measured_cpu']:.2f}x, modeled "
+          f"TPU decode {out['serving']['modeled_tpu_decode_speedup']:.2f}x) "
+          f"-> {OUT}")
+    if rows is not None:
+        rows.append(("quant_serve/float_tok_s",
+                     results["float"]["tok_s"], ""))
+        rows.append((f"quant_serve/{qname}_tok_s",
+                     results[qname]["tok_s"],
+                     f"modeled_tpu_decode_speedup="
+                     f"{out['serving']['modeled_tpu_decode_speedup']:.2f}x"))
+        return rows
+    return out
+
+
+if __name__ == "__main__":
+    run()

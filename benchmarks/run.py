@@ -11,6 +11,8 @@ model) are cached under .cache/ — the first run trains it (~10 min CPU).
   table9  loss-function ablation                      (paper Table 9)
   fig1    per-layer activation-distribution gap       (paper Figure 1)
   kernels dequant-matmul microbench                   (deployment path)
+  quant_serve  quantized-vs-float serving + expert/W8A8 kernel rows
+               (writes BENCH_quant_serve.json)
 """
 from __future__ import annotations
 
@@ -26,8 +28,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig1_distribution, kernels_bench,
-                            table2_weight_only, table3_runtime,
-                            table4_ptq_methods, table6_iters,
+                            quant_serve_bench, table2_weight_only,
+                            table3_runtime, table4_ptq_methods, table6_iters,
                             table8_calibration, table9_losses, table10_awq)
 
     suites = {
@@ -40,6 +42,7 @@ def main() -> None:
         "table10": table10_awq.run,
         "fig1": fig1_distribution.run,
         "kernels": kernels_bench.run,
+        "quant_serve": quant_serve_bench.run,
     }
     selected = (args.only.split(",") if args.only else list(suites))
 

@@ -17,17 +17,22 @@ from repro.core.quant.types import QuantizedTensor
 from repro.utils.tree import tree_get, tree_set
 
 
-def iter_linears(block: dict, prefix: str = "") -> Iterator[tuple[str, dict]]:
-    """Yield (path, linear_param_dict) for every quantizable linear."""
+def iter_linears(block: dict, prefix: str = "",
+                 max_ndim: int = 3) -> Iterator[tuple[str, dict]]:
+    """Yield (path, linear_param_dict) for every quantizable linear.
+
+    Per-block calibration sees (K, N) / expert (E, K, N) leaves; the deploy
+    transform walks the full scan-stacked tree, where expert weights carry
+    an extra layer dim (L, E, K, N), and passes max_ndim=4."""
     for k, v in block.items():
         if not isinstance(v, dict):
             continue
         w = v.get("w")
         if w is not None and not isinstance(w, dict) and \
-                getattr(w, "ndim", 0) in (2, 3):
+                2 <= getattr(w, "ndim", 0) <= max_ndim:
             yield prefix + k, v
         else:
-            yield from iter_linears(v, prefix + k + "/")
+            yield from iter_linears(v, prefix + k + "/", max_ndim)
 
 
 def tap_key_for(path: str) -> str:

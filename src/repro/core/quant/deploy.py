@@ -14,12 +14,20 @@ _SKIP = ("embed", "lm_head", "pos", "router", "conv")
 
 
 def quantize_params_for_serving(cfg: ModelConfig, params: dict,
-                                bits: int = 0, group_size: int = 0) -> dict:
+                                bits: int = 0, group_size: int = 0,
+                                act_bits: int = 0) -> dict:
+    """Pack every quantizable linear — stacked (E, K, N) expert weights
+    included — for the serving fast paths. `act_bits=8` additionally tags
+    each packed tensor for the true int8-activation (W8A8/W4A8) matmul
+    path in models/linear.py."""
     bits = bits or cfg.serve_quant_bits
     group_size = group_size or cfg.serve_quant_group
     if not bits:
         return params
-    for path, lin in list(iter_linears(params)):
+    # max_ndim=4: scan-stacked MoE expert weights are (L, E, K, N) — they
+    # pack to a stacked (L, E, K/vpb, N) layout consumed per-layer by the
+    # expert-batched kernel (previously they silently stayed float)
+    for path, lin in list(iter_linears(params, max_ndim=4)):
         if any(s in path for s in _SKIP):
             continue
         w = lin["w"]
@@ -28,6 +36,6 @@ def quantize_params_for_serving(cfg: ModelConfig, params: dict,
         else:
             gs = group_size
         new_lin = dict(lin)
-        new_lin["w"] = quantize_stacked(w, bits, gs)
+        new_lin["w"] = quantize_stacked(w, bits, gs, act_bits=act_bits)
         params = tree_set(params, path, new_lin)
     return params

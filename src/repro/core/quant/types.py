@@ -39,7 +39,9 @@ class QuantizedTensor:
     bits: int      # static
     group_size: int  # static; -1 means one group over all of K
     shape: tuple   # static original (K, N) or (E, K, N)
-    act_bits: int = 0  # static; >0 => fake-quant activations (SmoothQuant A8)
+    act_bits: int = 0  # static; 8 => true per-token int8 A8 matmul path
+                       # (kernels/w8a8_matmul); other >0 => per-tensor
+                       # fake-quant activations (legacy SmoothQuant mode)
 
     def tree_flatten(self):
         return (self.qw, self.scale), (self.bits, self.group_size, self.shape,
@@ -122,12 +124,14 @@ def unpack(qw: jax.Array, bits: int, k: int) -> jax.Array:
 
 
 def quantize(w: jax.Array, bits: int, group_size: int = -1,
-             scale: jax.Array | None = None) -> QuantizedTensor:
+             scale: jax.Array | None = None,
+             act_bits: int = 0) -> QuantizedTensor:
     """RTN-quantize a (K, N) weight to a packed QuantizedTensor."""
     if scale is None:
         scale = compute_scales(w, bits, group_size)
     q = quantize_values(w, scale, bits)
-    return QuantizedTensor(pack(q, bits), scale, bits, group_size, tuple(w.shape))
+    return QuantizedTensor(pack(q, bits), scale, bits, group_size,
+                           tuple(w.shape), act_bits)
 
 
 def dequantize(qt: QuantizedTensor, dtype=jnp.float32) -> jax.Array:
@@ -156,7 +160,8 @@ def _dequant2d(qw, scale, bits, k, n):
     return q.astype(jnp.float32) * scale[rows]
 
 
-def quantize_stacked(w: jax.Array, bits: int, group_size: int = -1) -> QuantizedTensor:
+def quantize_stacked(w: jax.Array, bits: int, group_size: int = -1,
+                     act_bits: int = 0) -> QuantizedTensor:
     """RTN-quantize weights with any leading batch dims (..., K, N)."""
 
     def one(wi):
@@ -165,11 +170,11 @@ def quantize_stacked(w: jax.Array, bits: int, group_size: int = -1) -> Quantized
 
     lead = w.shape[:-2]
     if not lead:
-        return quantize(w, bits, group_size)
+        return quantize(w, bits, group_size, act_bits=act_bits)
     qw, scale = jax.vmap(one)(w.reshape((-1,) + w.shape[-2:]))
     return QuantizedTensor(qw.reshape(lead + qw.shape[-2:]),
                            scale.reshape(lead + scale.shape[-2:]),
-                           bits, group_size, tuple(w.shape))
+                           bits, group_size, tuple(w.shape), act_bits)
 
 
 def fake_quant(w: jax.Array, bits: int, group_size: int = -1,
@@ -181,6 +186,21 @@ def fake_quant(w: jax.Array, bits: int, group_size: int = -1,
     g = scale.shape[0]
     q = quantize_values(w, scale, bits).reshape(g, k // g, n)
     return (q.astype(w.dtype) * scale[:, None, :].astype(w.dtype)).reshape(k, n)
+
+
+def quantize_activation(x: jax.Array, bits: int = 8):
+    """Dynamic symmetric per-token int8 activation quantization.
+
+    Returns (q, scale): q int8 with shape of x, scale f32 (..., 1) such that
+    q * scale ~= x with |error| <= scale / 2 elementwise (the amax of every
+    row lands exactly on the grid, so clipping never adds error).
+    """
+    qmax = qmax_for_bits(bits)
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-10) / qmax
+    q = jnp.clip(jnp.round(xf / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale
 
 
 def fake_quant_activation(x: jax.Array, bits: int = 8) -> jax.Array:

@@ -21,15 +21,10 @@ from jax.experimental import pallas as pl
 from repro.core.quant.types import qmax_for_bits, values_per_byte
 
 
-def _dequant_matmul_kernel(x_ref, qw_ref, scale_ref, o_ref, *, bits: int,
-                           group_size: int, bk: int):
-    k_step = pl.program_id(2)
-
-    @pl.when(k_step == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    qw = qw_ref[...]                                   # (bk/vpb, bn) uint8
+def unpack_tile(qw: jax.Array, bits: int, bk: int) -> jax.Array:
+    """(bk/vpb, bn) packed uint8 tile -> (bk, bn) int32 values in
+    [-qmax, qmax]. Lane-local shift/mask unpack (packing is along K, rows
+    interleave as r*vpb+i), shared by every dequant-style kernel."""
     vpb = values_per_byte(bits)
     qmax = qmax_for_bits(bits)
     bn = qw.shape[-1]
@@ -38,17 +33,29 @@ def _dequant_matmul_kernel(x_ref, qw_ref, scale_ref, o_ref, *, bits: int,
     else:
         mask = (1 << bits) - 1
         parts = [(qw >> (bits * i)) & mask for i in range(vpb)]
-        u = jnp.stack(parts, axis=1).reshape(bk, bn)   # row r*vpb+i order
-    q = u.astype(jnp.int32) - qmax                     # (bk, bn)
+        u = jnp.stack(parts, axis=1).reshape(bk, bn)
+    return u.astype(jnp.int32) - qmax
 
-    s = scale_ref[...]                                 # (gb, bn) f32
-    gb = s.shape[0]
+
+def scale_tile(q: jax.Array, s: jax.Array, bk: int) -> jax.Array:
+    """Apply a (gb, bn) group-scale block to a (bk, bn) int tile -> f32."""
+    gb, bn = s.shape
     if gb == 1:
-        w = q.astype(jnp.float32) * s
-    else:
-        w = (q.reshape(gb, bk // gb, bn).astype(jnp.float32) *
-             s[:, None, :]).reshape(bk, bn)
+        return q.astype(jnp.float32) * s
+    return (q.reshape(gb, bk // gb, bn).astype(jnp.float32) *
+            s[:, None, :]).reshape(bk, bn)
 
+
+def _dequant_matmul_kernel(x_ref, qw_ref, scale_ref, o_ref, *, bits: int,
+                           group_size: int, bk: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = unpack_tile(qw_ref[...], bits, bk)             # (bk, bn) int32
+    w = scale_tile(q, scale_ref[...], bk)              # (bk, bn) f32
     x = x_ref[...]                                     # (bm, bk)
     o_ref[...] += jnp.dot(x.astype(jnp.bfloat16),
                           w.astype(jnp.bfloat16),

@@ -4,6 +4,13 @@ Dispatch: real TPU -> compiled Pallas; CPU -> `interpret=True` when forced
 via REPRO_DEQUANT_IMPL=pallas (tests), else the jnp reference (same math,
 fast on CPU). Handles token-dim padding and block-size selection so callers
 never deal with tiling constraints.
+
+Block-size selection has two regimes (see DESIGN.md "Quantized serving
+fast paths"): prefill-shaped calls (M > 8) use square-ish tiles, while
+decode-shaped skinny-M calls (M <= 8 — one token per serving slot) keep
+bm at the minimal 8-row tile and widen bn/bk instead, so per-step decode
+streams more packed weight bytes per grid step instead of padding tokens
+up to prefill tiles.
 """
 from __future__ import annotations
 
@@ -12,11 +19,19 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant.types import QuantizedTensor, values_per_byte
+from repro.core.quant.types import (QuantizedTensor, quantize_activation,
+                                    values_per_byte)
 from repro.kernels import ref
 from repro.kernels.channel_stats import channel_stats_pallas
 from repro.kernels.dequant_matmul import dequant_matmul_pallas
+from repro.kernels.expert_dequant_matmul import expert_dequant_matmul_pallas
 from repro.kernels.quantize import quantize_pack_pallas
+from repro.kernels.w8a8_matmul import w8a8_matmul_pallas
+
+# decode-shaped tiles: minimal token rows, wide weight tiles
+_SKINNY_M = 8
+_SKINNY_BN = 512
+_SKINNY_BK = 512
 
 
 def _interpret() -> bool:
@@ -34,31 +49,114 @@ def _pick_block(dim: int, target: int) -> int:
     return b
 
 
+def _pick_bk(k: int, gs: int, vpb: int, target: int) -> int | None:
+    """K block size that divides K, packs whole bytes, and tiles the scale
+    groups (whole groups per block, or whole blocks per group). Returns
+    None when no such block exists — e.g. a group size with a large odd
+    factor — so callers can fall back to the jnp reference instead of
+    spinning this shrink loop down to a mod-by-zero."""
+    bk = _pick_block(k, target)
+    while k % bk != 0 or (gs < bk and bk % gs != 0) or \
+            (gs >= bk and gs % bk != 0) or bk % vpb != 0:
+        bk //= 2  # halving can break K-divisibility; re-checked above
+        if bk < max(vpb, 1):
+            return None
+    return bk
+
+
+def _matmul_blocks(m: int, bm: int, bn: int, bk: int):
+    """Prefill-vs-decode tile regime: skinny token counts trade token-dim
+    padding for wider weight tiles."""
+    if m <= _SKINNY_M:
+        return _SKINNY_M, max(bn, _SKINNY_BN), max(bk, _SKINNY_BK)
+    return bm, bn, bk
+
+
+def _plan_tiles(m: int, k: int, n: int, qt: QuantizedTensor,
+                bm: int, bn: int, bk: int):
+    """Shared dispatch planning for every quantized-matmul wrapper: tile
+    regime by token count, then concrete (bm, bn, bk) blocks. Returns None
+    when K admits no valid block — callers fall back to the jnp ref."""
+    gs = qt.group_size if qt.group_size != -1 else k
+    vpb = values_per_byte(qt.bits)
+    bm, bn, bk = _matmul_blocks(m, bm, bn, bk)
+    bk_ = _pick_bk(k, gs, vpb, bk)
+    if bk_ is None:
+        return None
+    return _pick_block(max(m, 8), bm), _pick_block(n, bn), bk_
+
+
 def dequant_matmul(x: jax.Array, qt: QuantizedTensor, *, out_dtype=None,
                    bm: int = 128, bn: int = 256, bk: int = 256) -> jax.Array:
     """x: (M, K) @ packed (K, N) -> (M, N). Pads M to the tile size."""
     out_dtype = out_dtype or x.dtype
     m, k = x.shape
-    n = qt.n
-    gs = qt.group_size if qt.group_size != -1 else k
-    bm_ = _pick_block(max(m, 8), bm)
+    plan = _plan_tiles(m, k, qt.n, qt, bm, bn, bk)
+    if plan is None:
+        y = ref.dequant_matmul_ref(x, qt.qw, qt.scale, bits=qt.bits,
+                                   group_size=qt.group_size, k=k)
+        return y.astype(out_dtype)
+    bm_, bn_, bk_ = plan
     pad_m = (-m) % bm_
     if pad_m:
         x = jnp.pad(x, ((0, pad_m), (0, 0)))
-    bk_ = _pick_block(k, bk)
-    # keep scale-group tiling consistent
-    vpb = values_per_byte(qt.bits)
-    while (gs < bk_ and bk_ % gs != 0) or (gs >= bk_ and gs % bk_ != 0) or \
-            bk_ % vpb != 0:
-        bk_ //= 2
-        assert bk_ >= vpb, (k, gs, vpb)
-    bn_ = _pick_block(n, bn)
     y = dequant_matmul_pallas(x, qt.qw, qt.scale, bits=qt.bits,
                               group_size=qt.group_size, bm=bm_, bn=bn_,
                               bk=bk_, interpret=_interpret())
     if pad_m:
         y = y[:m]
     return y.astype(out_dtype)
+
+
+def expert_dequant_matmul(x: jax.Array, qt: QuantizedTensor, *,
+                          out_dtype=None, bm: int = 128, bn: int = 256,
+                          bk: int = 256) -> jax.Array:
+    """Expert-batched x: (E, C, K) @ packed (E, K, N) -> (E, C, N).
+
+    Consumes the stacked packed layout directly — no float (E, K, N)
+    expert stack is ever materialized. Pads the capacity dim to the tile
+    size; decode-shaped capacities (C <= 8) take the skinny tiles."""
+    out_dtype = out_dtype or x.dtype
+    e, c, k = x.shape
+    plan = _plan_tiles(c, k, qt.n, qt, bm, bn, bk)
+    if plan is None:
+        y = ref.expert_dequant_matmul_ref(x, qt.qw, qt.scale, bits=qt.bits,
+                                          group_size=qt.group_size, k=k)
+        return y.astype(out_dtype)
+    bm_, bn_, bk_ = plan
+    pad_c = (-c) % bm_
+    if pad_c:
+        x = jnp.pad(x, ((0, 0), (0, pad_c), (0, 0)))
+    y = expert_dequant_matmul_pallas(x, qt.qw, qt.scale, bits=qt.bits,
+                                     group_size=qt.group_size, bm=bm_,
+                                     bn=bn_, bk=bk_, interpret=_interpret())
+    if pad_c:
+        y = y[:, :c]
+    return y.astype(out_dtype)
+
+
+def w8a8_matmul(x: jax.Array, qt: QuantizedTensor, *, out_dtype=None,
+                bm: int = 128, bn: int = 256, bk: int = 256) -> jax.Array:
+    """True A8 path: per-token int8 activation quantize, int8 x int8 -> int32
+    MXU matmul, per-(token, channel-group) rescale. x: (M, K) -> (M, N)."""
+    out_dtype = out_dtype or x.dtype
+    m, k = x.shape
+    xq, xs = quantize_activation(x, 8)                 # int8, (M, 1) f32
+    plan = _plan_tiles(m, k, qt.n, qt, bm, bn, bk)
+    if plan is None:
+        y = ref.w8a8_matmul_ref(xq, qt.qw, qt.scale, bits=qt.bits,
+                                group_size=qt.group_size, k=k)
+        return (y * xs).astype(out_dtype)
+    bm_, bn_, bk_ = plan
+    pad_m = (-m) % bm_
+    if pad_m:
+        xq = jnp.pad(xq, ((0, pad_m), (0, 0)))
+    y = w8a8_matmul_pallas(xq, qt.qw, qt.scale, bits=qt.bits,
+                           group_size=qt.group_size, bm=bm_, bn=bn_,
+                           bk=bk_, interpret=_interpret())
+    if pad_m:
+        y = y[:m]
+    return (y * xs).astype(out_dtype)
 
 
 def channel_stats(x: jax.Array):
@@ -78,11 +176,10 @@ def quantize_pack(w: jax.Array, scale: jax.Array, *, bits: int,
     if _interpret() and os.environ.get("REPRO_DEQUANT_IMPL") != "pallas":
         return ref.quantize_pack_ref(w, scale, bits=bits)
     gs = group_size if group_size != -1 else k
-    bk = _pick_block(k, 256)
     vpb = values_per_byte(bits)
-    while (gs < bk and bk % gs != 0) or (gs >= bk and gs % bk != 0) or \
-            bk % vpb != 0:
-        bk //= 2
+    bk = _pick_bk(k, gs, vpb, 256)
+    if bk is None:  # no valid tiling (e.g. group_size with odd factors)
+        return ref.quantize_pack_ref(w, scale, bits=bits)
     bn = _pick_block(n, 256)
     return quantize_pack_pallas(w, scale, bits=bits, group_size=group_size,
                                 bk=bk, bn=bn, interpret=_interpret())

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quant.types import (QuantizedTensor, compute_scales,
-                                    dequantize, pack, quantize_values)
+                                    dequantize, pack, quantize_values, unpack)
 
 
 def dequant_matmul_ref(x: jax.Array, qw: jax.Array, scale: jax.Array, *,
@@ -14,6 +14,34 @@ def dequant_matmul_ref(x: jax.Array, qw: jax.Array, scale: jax.Array, *,
     w = dequantize(qt, jnp.float32)
     return jnp.dot(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
                    preferred_element_type=jnp.float32)
+
+
+def expert_dequant_matmul_ref(x: jax.Array, qw: jax.Array, scale: jax.Array,
+                              *, bits: int, group_size: int,
+                              k: int) -> jax.Array:
+    """x: (E, M, K) @ packed (E, K/vpb, N) -> (E, M, N) f32."""
+    e = x.shape[0]
+    qt = QuantizedTensor(qw, scale, bits, group_size, (e, k, qw.shape[-1]))
+    w = dequantize(qt, jnp.float32)
+    return jnp.einsum("emk,ekn->emn", x.astype(jnp.bfloat16),
+                      w.astype(jnp.bfloat16),
+                      preferred_element_type=jnp.float32)
+
+
+def w8a8_matmul_ref(xq: jax.Array, qw: jax.Array, scale: jax.Array, *,
+                    bits: int, group_size: int, k: int) -> jax.Array:
+    """Exact int32 oracle for the W8A8 kernel (pre activation-rescale).
+    xq: (M, K) int8; qw: (K/vpb, N); scale: (G, N). Returns (M, N) f32."""
+    m = xq.shape[0]
+    n = qw.shape[1]
+    q = unpack(qw, bits, k)                            # (K, N) int32
+    g = scale.shape[0]
+    acc = jnp.einsum("mgk,gkn->mgn",
+                     xq.astype(jnp.int32).reshape(m, g, k // g),
+                     q.reshape(g, k // g, n),
+                     preferred_element_type=jnp.int32)
+    return jnp.sum(acc.astype(jnp.float32) *
+                   scale.astype(jnp.float32)[None], axis=1)
 
 
 def channel_stats_ref(x: jax.Array):

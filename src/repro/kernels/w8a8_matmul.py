@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: true W8A8 / W4A8 int8 MXU matmul (FPTQ-style).
+
+Replaces the fake-quant-then-bf16 detour that `act_bits=8` used to take:
+activations are dynamically quantized to int8 with a per-token scale
+(`quantize_activation` in core/quant/types.py), packed weights are unpacked
+to int8 values in VREGs, and each scale group runs one
+int8 x int8 -> int32 MXU dot. The int32 partials are rescaled per group by
+the weight scale and accumulated in an f32 VMEM tile; the per-token
+activation scale is a rank-1 rescale applied by the caller (kernels/ops.py)
+so the kernel's operands stay MXU-shaped int8/uint8 tiles.
+
+Works for any packed bits in {2, 4, 8}: the unpacked values always fit
+int8 (|q| <= 127), so W4A8 — the regime FPTQ shows is the practical
+sweet spot — uses the exact same kernel as W8A8.
+
+Grid: (M/bm, N/bn, K/bk), K innermost, accumulating across K steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.quant.types import values_per_byte
+from repro.kernels.dequant_matmul import _scale_blockspec, unpack_tile
+
+
+def _w8a8_matmul_kernel(x_ref, qw_ref, scale_ref, o_ref, *, bits: int,
+                        bk: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # unpacked values always fit int8 (|q| <= 127), so the MXU dots below
+    # run int8 x int8 -> int32 for any packed bits
+    w8 = unpack_tile(qw_ref[...], bits, bk).astype(jnp.int8)   # (bk, bn)
+    x8 = x_ref[...]                                    # (bm, bk) int8
+    s = scale_ref[...]                                 # (gb, bn) f32
+    gb = s.shape[0]
+    gsb = bk // gb
+    acc = o_ref[...]
+    for gi in range(gb):
+        d = jnp.dot(x8[:, gi * gsb:(gi + 1) * gsb],
+                    w8[gi * gsb:(gi + 1) * gsb],
+                    preferred_element_type=jnp.int32)
+        acc = acc + d.astype(jnp.float32) * s[gi][None, :]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group_size", "bm", "bn",
+                                             "bk", "interpret"))
+def w8a8_matmul_pallas(xq: jax.Array, qw: jax.Array, scale: jax.Array, *,
+                       bits: int, group_size: int, bm: int = 128,
+                       bn: int = 128, bk: int = 256,
+                       interpret: bool = False) -> jax.Array:
+    """xq: (M, K) int8; qw: (K/vpb, N) uint8; scale: (G, N).
+    Returns (M, N) f32 — *before* the per-token activation rescale."""
+    m, k = xq.shape
+    n = qw.shape[1]
+    g = scale.shape[0]
+    vpb = values_per_byte(bits)
+    bm = min(bm, m)
+    bk = min(bk, k)
+    bn = min(bn, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    assert bk % vpb == 0
+    # every K-block must hold whole scale groups: the int32 accumulator is
+    # rescaled group-by-group inside the block
+    gs = group_size if group_size != -1 else k
+    assert (gs >= bk and gs % bk == 0) or (gs < bk and bk % gs == 0)
+
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(_w8a8_matmul_kernel, bits=bits, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // vpb, bn), lambda i, j, kk: (kk, j)),
+            _scale_blockspec(group_size, k, g, bk, bn),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(xq, qw, scale.astype(jnp.float32))

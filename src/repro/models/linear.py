@@ -2,14 +2,21 @@
 
 A linear's params are {"w": W} or {"w": W, "b": b}. W may be a plain array
 (K, N) / stacked experts (E, K, N), or a packed `QuantizedTensor` — the
-paper's deployment format. Dispatch:
+paper's deployment format. Dispatch (see DESIGN.md "Quantized serving fast
+paths" for the full table):
 
-  * plain array          -> jnp.einsum (MXU)
-  * QuantizedTensor, TPU -> Pallas fused dequant-matmul kernel
-  * QuantizedTensor, CPU -> reference dequant + einsum (same math)
+  * plain array                    -> jnp.einsum (MXU)
+  * QuantizedTensor, TPU           -> Pallas fused dequant-matmul kernel
+    - (K, N) weight                  -> kernels/dequant_matmul
+    - (E, K, N) stacked experts      -> kernels/expert_dequant_matmul
+      (packed expert slabs consumed directly; no float stack)
+    - act_bits == 8                  -> kernels/w8a8_matmul (true int8 MXU)
+  * QuantizedTensor, CPU           -> reference dequant + einsum / the
+    int32 W8A8 reference (same math)
 
-`act_bits` on the QuantizedTensor fake-quants the activation first
-(SmoothQuant W_xA8 mode).
+`act_bits == 8` selects the true A8 path: per-token int8 activation
+quantization feeding an int8 x int8 -> int32 matmul (FPTQ's W4A8/W8A8
+regime). Other act_bits values keep the legacy per-tensor fake-quant.
 """
 from __future__ import annotations
 
@@ -19,7 +26,11 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant.types import QuantizedTensor, dequantize, fake_quant_activation
+from repro.core.quant.types import (QuantizedTensor, dequantize,
+                                    fake_quant_activation,
+                                    quantize_activation)
+
+_KERNEL_BITS = (2, 4, 8)
 
 
 def _use_pallas() -> bool:
@@ -37,23 +48,48 @@ def materialize(w: Any, dtype) -> jax.Array:
     return w.astype(dtype)
 
 
+def _dense_quantized(w: QuantizedTensor, x: jax.Array, dtype) -> jax.Array:
+    """2-D quantized matmul: route to the W8A8 int8 path, the fused
+    dequant kernel, or the reference dequant + einsum."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if w.act_bits == 8 and w.bits in _KERNEL_BITS:
+        if _use_pallas():
+            from repro.kernels import ops as kops
+
+            y2 = kops.w8a8_matmul(x2, w, out_dtype=dtype)
+        else:
+            from repro.kernels import ref as kref
+
+            xq, xs = quantize_activation(x2, 8)
+            y2 = (kref.w8a8_matmul_ref(xq, w.qw, w.scale, bits=w.bits,
+                                       group_size=w.group_size,
+                                       k=w.k) * xs).astype(dtype)
+    else:
+        if w.act_bits:  # legacy per-tensor fake-quant (act_bits != 8)
+            x2 = fake_quant_activation(x2, w.act_bits)
+        if _use_pallas() and w.bits in _KERNEL_BITS:
+            from repro.kernels import ops as kops
+
+            y2 = kops.dequant_matmul(x2, w, out_dtype=dtype)
+        else:
+            y2 = jnp.einsum("mk,kn->mn", x2, dequantize(w, dtype),
+                            preferred_element_type=jnp.float32).astype(dtype)
+    return y2.reshape(*lead, w.n)
+
+
 def dense(p: dict, x: jax.Array, *, dtype=None) -> jax.Array:
     """y = x @ w (+ b). x: (..., K). Handles quantized + biased linears."""
     w = p["w"]
     dtype = dtype or x.dtype
-    if isinstance(w, QuantizedTensor):
+    if isinstance(w, QuantizedTensor) and w.qw.ndim == 2:
+        y = _dense_quantized(w, x, dtype)
+    elif isinstance(w, QuantizedTensor):
         if w.act_bits:
             x = fake_quant_activation(x, w.act_bits)
-        if _use_pallas() and w.qw.ndim == 2 and w.bits in (2, 4, 8):
-            from repro.kernels import ops as kops
-
-            lead = x.shape[:-1]
-            y2 = kops.dequant_matmul(x.reshape(-1, x.shape[-1]), w, out_dtype=dtype)
-            y = y2.reshape(*lead, w.n)
-        else:
-            wm = dequantize(w, dtype)
-            y = jnp.einsum("...k,kn->...n", x, wm,
-                           preferred_element_type=jnp.float32).astype(dtype)
+        wm = dequantize(w, dtype)
+        y = jnp.einsum("...k,kn->...n", x, wm,
+                       preferred_element_type=jnp.float32).astype(dtype)
     else:
         y = jnp.einsum("...k,kn->...n", x.astype(dtype), w.astype(dtype),
                        preferred_element_type=jnp.float32).astype(dtype)
@@ -63,17 +99,27 @@ def dense(p: dict, x: jax.Array, *, dtype=None) -> jax.Array:
 
 
 def dense_experts(p: dict, x: jax.Array, *, dtype=None) -> jax.Array:
-    """Batched expert matmul: x (E, C, K) @ w (E, K, N) -> (E, C, N)."""
+    """Batched expert matmul: x (E, C, K) @ w (E, K, N) -> (E, C, N).
+
+    Quantized expert stacks take the expert-batched Pallas kernel: packed
+    (E, K/vpb, N) slabs are consumed directly, so the float expert stack is
+    never materialized (the old path dequantized all E experts per call)."""
     w = p["w"]
     dtype = dtype or x.dtype
     if isinstance(w, QuantizedTensor):
         if w.act_bits:
             x = fake_quant_activation(x, w.act_bits)
-        wm = dequantize(w, dtype)
+        if _use_pallas() and w.qw.ndim == 3 and w.bits in _KERNEL_BITS:
+            from repro.kernels import ops as kops
+
+            y = kops.expert_dequant_matmul(x, w, out_dtype=dtype)
+        else:
+            wm = dequantize(w, dtype)
+            y = jnp.einsum("eck,ekn->ecn", x.astype(dtype), wm,
+                           preferred_element_type=jnp.float32).astype(dtype)
     else:
-        wm = w.astype(dtype)
-    y = jnp.einsum("eck,ekn->ecn", x.astype(dtype), wm,
-                   preferred_element_type=jnp.float32).astype(dtype)
+        y = jnp.einsum("eck,ekn->ecn", x.astype(dtype), w.astype(dtype),
+                       preferred_element_type=jnp.float32).astype(dtype)
     if "b" in p and p["b"] is not None:
         y = y + p["b"][:, None, :].astype(dtype)
     return y

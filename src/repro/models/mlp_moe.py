@@ -5,6 +5,11 @@ scattered into a per-expert (E, C, d) buffer (C = capacity), experts run as
 one batched einsum (sharded over the `expert`/model axis -> expert
 parallelism), and results are gathered back with router gates. Overflowing
 tokens are dropped (tracked in aux stats), as in Switch/GShard.
+
+Quantized expert stacks (`QuantizedTensor` with (E, K, N) shape) run the
+(E, C) buffer through the expert-batched Pallas dequant kernel via
+`dense_experts` — the packed slabs are consumed in place, never expanded
+to a float (E, K, N) stack (see DESIGN.md "Quantized serving fast paths").
 """
 from __future__ import annotations
 
@@ -66,7 +71,10 @@ def init_moe(cfg: ModelConfig, key) -> dict:
 def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
     m = cfg.moe
     c = int(m.capacity_factor * n_tokens * m.top_k / m.n_experts)
-    return max(8, -(-c // 8) * 8)  # round up to 8
+    # round up to 8: the minimal sublane tile, so quantized expert stacks hit
+    # kernels/expert_dequant_matmul without capacity-dim padding (decode-time
+    # capacities land exactly on its skinny bm=8 tile)
+    return max(8, -(-c // 8) * 8)
 
 
 def apply_moe(cfg: ModelConfig, p: dict, x: jax.Array,

@@ -1,7 +1,12 @@
 """Serving engines for (quantized) LMs.
 
 Weights may be float or packed QuantizedTensor (the paper's deployment
-format — dequant happens inside the fused Pallas matmul on TPU). Two
+format — dequant happens inside the fused Pallas matmul on TPU; both
+engines accept `quant_bits=...` to pack a float tree in place via
+`quantize_params_for_serving`). Decode steps present M = n_slots (or
+batch) token rows per linear, which rides the decode-shaped skinny-M
+kernel tiles picked by kernels/ops.py; quantized MoE experts run the
+expert-batched kernel without materializing float expert stacks. Two
 engines share the model code:
 
   * ServeEngine        — static batch: one prompt length, lockstep decode to
@@ -67,10 +72,37 @@ def _generate_jit(cfg, params, prompts, key, max_new, temperature, top_k,
     return toks.T                                              # (B, max_new)
 
 
+def _maybe_quantize(cfg, params, quant_bits, quant_group, act_bits):
+    """Pack a float param tree for serving when quant_bits is set (no-op on
+    already-packed trees: QuantizedTensor leaves are left untouched).
+    quant_group follows the deploy convention: 0 = cfg.serve_quant_group,
+    -1 = per-channel."""
+    if not quant_bits:
+        if act_bits:
+            raise ValueError("act_bits requires quant_bits (A8 tags live on "
+                             "packed QuantizedTensors)")
+        return params
+    from repro.core.quant.deploy import quantize_params_for_serving
+    from repro.core.quant.types import QuantizedTensor
+
+    leaves = jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    if any(isinstance(x, QuantizedTensor) for x in leaves):
+        raise ValueError("params already hold packed QuantizedTensors; "
+                         "pass quant_bits=0 (re-packing is a silent no-op "
+                         "and would drop the requested act_bits/group)")
+    return quantize_params_for_serving(cfg, params, bits=quant_bits,
+                                       group_size=quant_group,
+                                       act_bits=act_bits)
+
+
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, *, eos_id: int = -1):
+    def __init__(self, cfg: ModelConfig, params, *, eos_id: int = -1,
+                 quant_bits: int = 0, quant_group: int = 0,
+                 act_bits: int = 0):
         self.cfg = cfg
-        self.params = params
+        self.params = _maybe_quantize(cfg, params, quant_bits, quant_group,
+                                      act_bits)
         self.eos_id = eos_id
 
     def generate(self, prompts: np.ndarray, *, max_new: int = 32,
@@ -174,11 +206,14 @@ class ContinuousEngine:
                  n_pages: Optional[int] = None, eos_id: int = -1,
                  prefill_bucket: int = 16, prefill_batch: int = 8,
                  decode_block: int = 8,
-                 temperature: float = 0.0, top_k: int = 0, seed: int = 0):
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 quant_bits: int = 0, quant_group: int = 0,
+                 act_bits: int = 0):
         if cfg.enc_dec:
             raise NotImplementedError("paged serving covers decoder-only LMs")
         self.cfg = cfg
-        self.params = params
+        self.params = _maybe_quantize(cfg, params, quant_bits, quant_group,
+                                      act_bits)
         self.n_slots = n_slots
         self.eos_id = eos_id
         self.prefill_bucket = max(1, prefill_bucket)

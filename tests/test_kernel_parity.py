@@ -1,0 +1,199 @@
+"""Differential kernel-parity harness.
+
+Every Pallas kernel is run in interpret mode and checked against two
+independent oracles per case: the pure-jnp reference in kernels/ref.py and
+a plain dequantize-then-einsum. The matrix sweeps bits x group_size x shape
+— including M=1 decode rows (skinny-M tile regime), ragged K/N, and
+expert-stacked weights — so new kernels and block-dispatch changes cannot
+silently diverge from the packed-format math.
+
+Runs identically under REPRO_DEQUANT_IMPL=pallas (CI's interpret-mode
+lowering job) and the default ref dispatch: the ops wrappers exercised here
+always lower through pallas_call(interpret=True) on CPU.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant.types import (compute_scales, dequantize, quantize,
+                                    quantize_activation, quantize_stacked)
+from repro.kernels import ops, ref
+
+BITS = [2, 4, 8]
+GROUPS = [-1, 32, 64, 128]
+# (M, K, N): M=1/3 decode-skinny rows, ragged (non-pow2-tile) K/N mixes
+DENSE_SHAPES = [(1, 128, 64), (3, 256, 80), (8, 128, 192)]
+# (E, C, K, N): C=5 forces capacity-dim padding inside the wrapper
+EXPERT_SHAPES = [(2, 5, 128, 64), (3, 8, 256, 96)]
+W8A8_SHAPES = [(1, 128, 96), (7, 256, 64)]
+
+
+def _key(*salts):
+    return jax.random.split(jax.random.PRNGKey(sum(salts) % (2 ** 31)))
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("gs", GROUPS)
+@pytest.mark.parametrize("mkn", DENSE_SHAPES)
+def test_dense_parity(bits, gs, mkn):
+    m, k, n = mkn
+    kx, kw = _key(bits, gs, m, k, n)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32) * 0.1
+    qt = quantize(w, bits, gs)
+    y_pal = ops.dequant_matmul(x, qt)                  # pallas interpret
+    y_ref = ref.dequant_matmul_ref(x, qt.qw, qt.scale, bits=bits,
+                                   group_size=gs, k=k)
+    y_ein = jnp.einsum("mk,kn->mn", x.astype(jnp.bfloat16),
+                       dequantize(qt, jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ein),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("gs", GROUPS)
+@pytest.mark.parametrize("eckn", EXPERT_SHAPES)
+def test_expert_parity(bits, gs, eckn):
+    e, c, k, n = eckn
+    kx, kw = _key(bits, gs, e, c, k, n)
+    x = jax.random.normal(kx, (e, c, k), jnp.float32)
+    w = jax.random.normal(kw, (e, k, n), jnp.float32) * 0.1
+    qt = quantize_stacked(w, bits, gs)
+    y_pal = ops.expert_dequant_matmul(x, qt)           # pallas interpret
+    y_ref = ref.expert_dequant_matmul_ref(x, qt.qw, qt.scale, bits=bits,
+                                          group_size=gs, k=k)
+    y_ein = jnp.einsum("eck,ekn->ecn", x.astype(jnp.bfloat16),
+                       dequantize(qt, jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ein),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("gs", GROUPS)
+@pytest.mark.parametrize("mkn", W8A8_SHAPES)
+def test_w8a8_parity(bits, gs, mkn):
+    m, k, n = mkn
+    kx, kw = _key(bits, gs, m, k, n, 7)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32) * 0.1
+    qt = quantize(w, bits, gs, act_bits=8)
+    y_pal = ops.w8a8_matmul(x, qt)                     # pallas interpret
+    xq, xs = quantize_activation(x, 8)
+    y_ref = ref.w8a8_matmul_ref(xq, qt.qw, qt.scale, bits=bits,
+                                group_size=gs, k=k) * xs
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    # the int8-activation path must still track the float-activation
+    # dequant matmul (A8 quantization noise only)
+    y_f = jnp.einsum("mk,kn->mn", x, dequantize(qt, jnp.float32))
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_f),
+                               rtol=5e-2, atol=5e-2 * float(jnp.max(jnp.abs(y_f))))
+
+
+# ---------------------------------------------------------------- dispatch
+
+def test_skinny_decode_blocks_selected():
+    """M <= 8 picks the decode tile regime: bm stays at the minimal 8-row
+    tile while bn/bk widen (no padding up to prefill tiles)."""
+    assert ops._matmul_blocks(1, 128, 256, 256) == (8, 512, 512)
+    assert ops._matmul_blocks(8, 128, 256, 256) == (8, 512, 512)
+    assert ops._matmul_blocks(9, 128, 256, 256) == (128, 256, 256)
+    assert ops._matmul_blocks(128, 128, 256, 256) == (128, 256, 256)
+
+
+def test_pick_bk_guard():
+    """_pick_bk refuses un-tileable (K, group_size) combos instead of
+    shrinking to bk=0 (regression: the quantize_pack loop had no guard and
+    could spin into a mod-by-zero)."""
+    assert ops._pick_bk(768, 3, 2, 256) is None        # gs=3 never tiles
+    assert ops._pick_bk(256, 32, 2, 256) == 256
+    assert ops._pick_bk(96, 64, 2, 256) is None        # 96/64 interlock
+    assert ops._pick_bk(128, 128, 4, 256) == 128
+    # halving must not yield a non-divisor of K (K=18 shrinks 18->9->4,
+    # and 4 does not divide 18: reject, don't crash downstream)
+    assert ops._pick_bk(18, 2, 4, 256) is None
+
+
+def test_dequant_matmul_odd_k_falls_back():
+    """K=18 / W2g2: every candidate block fails a tiling constraint — the
+    wrapper must take the ref fallback, not assert inside pallas_call."""
+    kx, kw = _key(13)
+    x = jax.random.normal(kx, (4, 18), jnp.float32)
+    w = jax.random.normal(kw, (18, 16), jnp.float32) * 0.1
+    qt = quantize(w, 2, 2)
+    y = ops.dequant_matmul(x, qt)
+    y_ref = ref.dequant_matmul_ref(x, qt.qw, qt.scale, bits=2, group_size=2,
+                                   k=18)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_quantize_pack_adversarial_group_size(bits, monkeypatch):
+    """k=768, group_size=3: no valid K tile exists — must fall back to the
+    jnp reference, not crash (regression for the unguarded shrink loop)."""
+    monkeypatch.setenv("REPRO_DEQUANT_IMPL", "pallas")
+    w = jax.random.normal(jax.random.PRNGKey(3), (768, 16)) * 0.2
+    s = compute_scales(w, bits, 3)
+    packed = ops.quantize_pack(w, s, bits=bits, group_size=3)
+    assert np.array_equal(np.asarray(packed),
+                          np.asarray(ref.quantize_pack_ref(w, s, bits=bits)))
+
+
+def test_dequant_matmul_adversarial_group_size():
+    """The dense matmul wrapper takes the same graceful fallback."""
+    kx, kw = _key(11)
+    x = jax.random.normal(kx, (4, 768), jnp.float32)
+    w = jax.random.normal(kw, (768, 16), jnp.float32) * 0.1
+    qt = quantize(w, 4, 3)
+    y = ops.dequant_matmul(x, qt)
+    y_ref = ref.dequant_matmul_ref(x, qt.qw, qt.scale, bits=4, group_size=3,
+                                   k=768)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------- MoE forward integration
+
+def test_quantized_moe_forward_uses_expert_kernel(monkeypatch):
+    """A quantized MoE block must route its expert matmuls through the
+    expert-batched kernel and never dequantize the full expert stack."""
+    from repro.configs import TINY
+    from repro.models import linear as linear_mod
+    from repro.models.config import MoEConfig
+    from repro.models.mlp_moe import apply_moe, init_moe
+
+    monkeypatch.setenv("REPRO_DEQUANT_IMPL", "pallas")
+    cfg = TINY.replace(d_model=64, moe=MoEConfig(n_experts=4, top_k=2,
+                                                 d_ff_expert=64))
+    p = init_moe(cfg, jax.random.PRNGKey(0))
+    for name in ("wi", "wg", "wo"):
+        p["experts"][name]["w"] = quantize_stacked(
+            p["experts"][name]["w"], 4, 32)
+
+    calls = []
+    real = ops.expert_dequant_matmul
+
+    def spy(*a, **kw):
+        calls.append(a[1].shape)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ops, "expert_dequant_matmul", spy)
+
+    def no_dequant(*a, **kw):
+        raise AssertionError("quantized expert stack was dequantized")
+
+    monkeypatch.setattr(linear_mod, "dequantize", no_dequant)
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 64)) * 0.3
+    y, _aux = apply_moe(cfg, p, x)
+    assert y.shape == (1, 16, 64)
+    assert len(calls) == 3                             # wg, wi, wo
+    assert np.all(np.isfinite(np.asarray(y)))

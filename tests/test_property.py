@@ -14,7 +14,8 @@ from hypothesis import given, settings, strategies as st
 from repro.core.normtweak.losses import l_dist, l_kl, l_mse
 from repro.core.quant.smoothquant import (fold_into_norm, scale_weight_rows,
                                           smooth_scales)
-from repro.core.quant.types import (dequantize, qmax_for_bits, quantize)
+from repro.core.quant.types import (dequantize, qmax_for_bits, quantize,
+                                    quantize_activation, quantize_stacked)
 from repro.models.attention import _cache_write, init_kv_cache
 from repro.models.config import ModelConfig
 
@@ -70,6 +71,51 @@ def test_ring_cache_holds_last_window_positions(window, n):
     # values stored where expected
     slot = (n - 1) % window
     assert float(cache["k"][0, slot, 0, 0]) == float(n - 1)
+
+
+@settings(max_examples=12, deadline=None)
+@given(bits=st.sampled_from([2, 4]),
+       e=st.integers(1, 3),
+       k=st.sampled_from([16, 32]),
+       n=st.sampled_from([8, 16]),
+       seed=st.integers(0, 2 ** 16))
+def test_property_packed_grid_survives_expert_kernel_exactly(bits, e, k, n,
+                                                             seed):
+    """Random int2/int4 grids round-trip quantize_stacked -> the Pallas
+    expert dequant kernel bit-exactly: with every column's amax pinned to
+    qmax the scale is exactly 1.0, so pack/unpack, the bf16 cast (integers
+    <= 127 are exact), and the one-hot identity matmul add no error."""
+    qmax = qmax_for_bits(bits)
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-qmax, qmax + 1, size=(e, k, n))
+    q[:, 0, :] = qmax                                  # pin scale to 1.0
+    w = jnp.asarray(q, jnp.float32)
+    qt = quantize_stacked(w, bits, -1)
+    eye = jnp.broadcast_to(jnp.eye(k, dtype=jnp.float32), (e, k, k))
+
+    from repro.kernels import ops
+    deq = ops.expert_dequant_matmul(eye, qt, out_dtype=jnp.float32)
+    assert np.array_equal(np.asarray(deq), np.asarray(w))
+    # the jnp unpack path agrees bit-exactly too
+    assert np.array_equal(np.asarray(dequantize(qt)), np.asarray(w))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 16),
+       t=st.sampled_from([1, 3, 16]),
+       k=st.sampled_from([32, 128]),
+       mag=st.floats(1e-3, 1e3))
+def test_property_activation_quantize_error_bounded(seed, t, k, mag):
+    """int8 activation quantize-dequant error is bounded by scale/2
+    elementwise: every row amax lands exactly on the grid, so rounding —
+    never clipping — is the only error source (the W8A8 rescale premise)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (t, k)) * mag
+    q, scale = quantize_activation(x, 8)
+    assert q.dtype == jnp.int8
+    err = np.abs(np.asarray(q, np.float32) * np.asarray(scale) -
+                 np.asarray(x))
+    bound = np.asarray(scale) / 2 + 1e-6 * mag
+    assert np.all(err <= bound)
 
 
 @settings(max_examples=25, deadline=None)
