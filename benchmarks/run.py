@@ -28,7 +28,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig1_distribution, kernels_bench,
-                            quant_serve_bench, table2_weight_only,
+                            paged_attn_bench, quant_serve_bench,
+                            table2_weight_only,
                             table3_runtime, table4_ptq_methods, table6_iters,
                             table8_calibration, table9_losses, table10_awq)
 
@@ -43,6 +44,7 @@ def main() -> None:
         "fig1": fig1_distribution.run,
         "kernels": kernels_bench.run,
         "quant_serve": quant_serve_bench.run,
+        "paged_attn": paged_attn_bench.run,
     }
     selected = (args.only.split(",") if args.only else list(suites))
 

@@ -6,7 +6,10 @@ Layer-by-layer over the model:
   3. the layer's linears are quantized (GPTQ/RTN/SmoothQuant, line 9);
   4. Adam updates ONLY the norm parameters against the channel-wise
      distribution loss for `iters` passes (lines 11-15), with the
-     depth-increasing LR of Eq. 3;
+     depth-increasing LR of Eq. 3 — the whole inner loop runs as one
+     jitted `lax.scan` over sample-batch chunks with donated norm/opt
+     buffers (`_tweak_scan`; per-chunk `_tweak_step` only for ragged
+     calibration sets);
   5. qX advances through the final quantized layer.
 
 Works for every zoo architecture: the block walker treats MLA latent norms,
@@ -55,9 +58,9 @@ class NTConfig:
     alpha: float = 0.5            # SmoothQuant migration strength
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "spec", "loss_name"))
-def _tweak_step(cfg, spec, loss_name, norms, rest, opt_state, x, fout,
-                positions, lr):
+def _tweak_update(cfg, spec, loss_name, norms, rest, opt_state, x, fout,
+                  positions, lr):
+    """One Adam step on the norm params for one sample-batch chunk."""
     loss_fn_ = LOSSES[loss_name]
 
     def loss_of(nrm):
@@ -69,6 +72,44 @@ def _tweak_step(cfg, spec, loss_name, norms, rest, opt_state, x, fout,
     loss, grads = jax.value_and_grad(loss_of)(norms)
     new_norms, new_state = adam_update(grads, opt_state, norms, lr=lr)
     return new_norms, new_state, loss
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "spec", "loss_name"))
+def _tweak_step(cfg, spec, loss_name, norms, rest, opt_state, x, fout,
+                positions, lr):
+    """Per-chunk dispatch — kept for ragged calibration sets (n % sb != 0)
+    and as the oracle the fused scan is asserted identical against."""
+    return _tweak_update(cfg, spec, loss_name, norms, rest, opt_state, x,
+                         fout, positions, lr)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "spec", "loss_name", "iters"),
+                   donate_argnames=("norms", "opt_state"))
+def _tweak_scan(cfg, spec, loss_name, norms, rest, opt_state, xs, fouts,
+                pos_chunks, lr, *, iters: int):
+    """The whole inner calibration loop (lines 11-15 of Algorithm 1) as ONE
+    jitted lax.scan over sample-batch chunks x iters, with the norm/opt
+    buffers donated — one dispatch per layer instead of iters * n_chunks,
+    and no per-chunk host round-trips. Chunk math is identical to
+    _tweak_step (same chunk order, same update), so final norms match the
+    per-chunk loop bit-for-bit.
+
+    xs / fouts: (C, sb, S, d); pos_chunks: (C, sb); returns the last
+    chunk's loss like the loop did."""
+    n_chunks = xs.shape[0]
+
+    def body(carry, ci):
+        norms, opt_state = carry
+        new_norms, new_state, loss = _tweak_update(
+            cfg, spec, loss_name, norms, rest, opt_state,
+            xs[ci], fouts[ci], pos_chunks[ci], lr)
+        return (new_norms, new_state), loss
+
+    (norms, opt_state), losses = jax.lax.scan(
+        body, (norms, opt_state),
+        jnp.tile(jnp.arange(n_chunks, dtype=jnp.int32), iters))
+    return norms, opt_state, losses[-1]
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "spec"))
@@ -120,14 +161,23 @@ def tweak_layers(cfg: ModelConfig, specs, blocks: list[dict], x0: jax.Array,
             lr = layer_lr(nt.lr0, nt.lr_scale, gi, total_layers)  # Eq. 3
             sb = max(1, min(nt.sample_batch, n))
             last_loss = jnp.zeros(())
-            for _ in range(nt.iters):                            # line 11
-                for s0 in range(0, n, sb):
-                    xb = qx[s0:s0 + sb]
-                    fb = fout[s0:s0 + sb]
-                    pb = positions[s0:s0 + sb]
-                    norms, opt_state, last_loss = _tweak_step(
-                        cfg, spec, nt.loss, norms, rest, opt_state,
-                        xb, fb, pb, lr)
+            if nt.iters > 0 and n % sb == 0:
+                # fused path: the whole iters x chunks loop is one jitted
+                # scan with donated norm/opt buffers (see _tweak_scan)
+                chunk = lambda a: a.reshape((n // sb, sb) + a.shape[1:])
+                norms, opt_state, last_loss = _tweak_scan(
+                    cfg, spec, nt.loss, norms, rest, opt_state,
+                    chunk(qx), chunk(fout), chunk(positions), lr,
+                    iters=nt.iters)
+            else:
+                # ragged tail (n % sb != 0) or iters=0 (a zero-length scan
+                # cannot yield losses[-1]): keep the per-chunk dispatch
+                for _ in range(nt.iters):                        # line 11
+                    for s0 in range(0, n, sb):
+                        norms, opt_state, last_loss = _tweak_step(
+                            cfg, spec, nt.loss, norms, rest, opt_state,
+                            qx[s0:s0 + sb], fout[s0:s0 + sb],
+                            positions[s0:s0 + sb], lr)
             qbp = tree_merge(norms, rest)
             stats["layer_loss"].append(float(last_loss))
             stats["layer_lr"].append(lr)

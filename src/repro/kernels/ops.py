@@ -25,6 +25,7 @@ from repro.kernels import ref
 from repro.kernels.channel_stats import channel_stats_pallas
 from repro.kernels.dequant_matmul import dequant_matmul_pallas
 from repro.kernels.expert_dequant_matmul import expert_dequant_matmul_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.quantize import quantize_pack_pallas
 from repro.kernels.w8a8_matmul import w8a8_matmul_pallas
 
@@ -32,6 +33,15 @@ from repro.kernels.w8a8_matmul import w8a8_matmul_pallas
 _SKINNY_M = 8
 _SKINNY_BN = 512
 _SKINNY_BK = 512
+
+# paged-attention read-width regime: the page walk streams one KV tile per
+# grid step; small pages ride whole (the common serving geometry — page_size
+# 16/32 — is far below the cap), oversized pages split into <=256-token
+# sub-tiles so a step's K/V/score working set stays VMEM-resident instead of
+# scaling with page_size (the read-width analogue of the skinny-M rules:
+# fix the token-tile height, let the page *walk* — not the tile — absorb
+# the width)
+_PAGE_TILE = 256
 
 
 def _interpret() -> bool:
@@ -157,6 +167,36 @@ def w8a8_matmul(x: jax.Array, qt: QuantizedTensor, *, out_dtype=None,
     if pad_m:
         y = y[:m]
     return (y * xs).astype(out_dtype)
+
+
+def _paged_tile(page_size: int) -> int:
+    """Token tile per page-walk step (read-width regime, see _PAGE_TILE)."""
+    return _pick_block(page_size, _PAGE_TILE)
+
+
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    block_table: jax.Array, kv_len: jax.Array, *,
+                    k_scale_pool=None, v_scale_pool=None, window=None,
+                    out_dtype=None) -> jax.Array:
+    """Fused paged-attention decode: q (S, H, hd) one token per slot against
+    the slot's block-table pages, int8 K/V dequantized inline from the scale
+    pools. Returns (S, H, hd_v) without materializing the gathered
+    (S, maxp*page_size, ...) KV view. CPU default runs the jnp page-walk
+    reference (same math); REPRO_DEQUANT_IMPL=pallas lowers the kernel in
+    interpret mode; TPU compiles it."""
+    s, h, hd = q.shape
+    kvh = k_pool.shape[2]
+    qg = q.reshape(s, kvh, h // kvh, hd)
+    tile = _paged_tile(k_pool.shape[1])
+    if _interpret() and os.environ.get("REPRO_DEQUANT_IMPL") != "pallas":
+        o = ref.paged_attention_ref(qg, k_pool, v_pool, block_table, kv_len,
+                                    k_scale_pool, v_scale_pool,
+                                    window=window, tile=tile)
+    else:
+        o = paged_attention_pallas(qg, k_pool, v_pool, block_table, kv_len,
+                                   k_scale_pool, v_scale_pool, window=window,
+                                   tile=tile, interpret=_interpret())
+    return o.reshape(s, h, v_pool.shape[-1]).astype(out_dtype or q.dtype)
 
 
 def channel_stats(x: jax.Array):

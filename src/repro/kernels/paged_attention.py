@@ -1,0 +1,193 @@
+"""Pallas TPU kernel: fused paged-attention decode with inline int8-KV dequant.
+
+The serving decode hot path (vLLM/PagedAttention-style): one query token per
+slot attends over that slot's paged KV cache. Instead of gathering every
+slot's pages into a contiguous ``(S, maxp*page_size, ...)`` HBM view and
+running a dense einsum (the PR-1 path, which reads — and for int8 KV
+materializes in bf16 — the *provisioned* window regardless of fill), the
+kernel walks the block table directly: per (slot, kv-head) grid cell it
+streams one page tile per grid step HBM->VMEM, dequantizes int8 K/V inline
+from the scale pools (which ride the same block table), and folds the tile
+into an online-softmax accumulator held in VMEM scratch. Pages beyond a
+slot's fill count — and, under sliding-window attention, pages wholly
+behind the window — are never touched: their grid steps are routed to the
+scratch page by the index map and skipped by ``pl.when``, so decode HBM
+traffic scales with *live* tokens, not ``maxp*page_size`` padding.
+
+Grid: ``(S, KVH, W * tiles_per_page)``, the page-walk axis innermost so the
+(m, l, acc) scratch accumulators carry across one cell's pages. The block
+table and fill counts are scalar-prefetched (``PrefetchScalarGridSpec``) so
+index maps can chase page indices before each tile's DMA is issued.
+
+Numerics mirror ``kernels/ref.paged_attention_ref`` op-for-op (same walk
+order, same f32 accumulation) so interpret-mode runs are bit-comparable
+with the jnp reference on CPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _tile_coords(t: jax.Array, *, page_size: int, tile: int):
+    """Grid step t on the page-walk axis -> (page slot w, sub-tile, base pos)."""
+    nt = page_size // tile
+    w = t // nt
+    sub = t % nt
+    base = w * page_size + sub * tile
+    return w, sub, base
+
+
+def _tile_live(s, t, bt, kl, *, page_size: int, tile: int,
+               window: Optional[int]):
+    """Does grid step t hold any live (unmasked) token for slot s?
+
+    Dead tiles are skipped entirely: beyond the fill count, on an unheld
+    block-table entry (-1), or — with sliding-window attention — wholly
+    behind the window. This predicate is shared by the index maps (route
+    the DMA to the scratch page) and the kernel body (skip the compute).
+    """
+    w, _, base = _tile_coords(t, page_size=page_size, tile=tile)
+    live = (base < kl[s]) & (bt[s, w] >= 0)
+    if window is not None:
+        live &= (base + tile) > (kl[s] - window)
+    return live
+
+
+def _page_map(s, h, t, bt, kl, *, page_size: int, tile: int,
+              window: Optional[int]):
+    """Block index of the K/V page tile for grid cell (s, h, t)."""
+    w, sub, _ = _tile_coords(t, page_size=page_size, tile=tile)
+    live = _tile_live(s, t, bt, kl, page_size=page_size, tile=tile,
+                      window=window)
+    page = jnp.where(live, jnp.maximum(bt[s, w], 0), 0)
+    return page, sub, h, 0
+
+
+def _scale_map(s, h, t, bt, kl, *, page_size: int, tile: int,
+               window: Optional[int]):
+    w, sub, _ = _tile_coords(t, page_size=page_size, tile=tile)
+    live = _tile_live(s, t, bt, kl, page_size=page_size, tile=tile,
+                      window=window)
+    page = jnp.where(live, jnp.maximum(bt[s, w], 0), 0)
+    return page, sub, h
+
+
+def _paged_attn_kernel(bt_ref, kl_ref, q_ref, k_ref, v_ref, *rest,
+                       page_size: int, tile: int, window: Optional[int],
+                       quant: bool, sm_scale: float, n_steps: int):
+    if quant:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
+    s_i = pl.program_id(0)
+    t_i = pl.program_id(2)
+    kl = kl_ref[s_i]
+    _, _, base = _tile_coords(t_i, page_size=page_size, tile=tile)
+    live = _tile_live(s_i, t_i, bt_ref, kl_ref, page_size=page_size,
+                      tile=tile, window=window)
+
+    @pl.when(t_i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
+        k = k_ref[0, :, 0, :]                                # (tile, hd)
+        v = v_ref[0, :, 0, :]                                # (tile, hd_v)
+        if quant:
+            kf = k.astype(jnp.float32) * ks_ref[0, :, 0][:, None]
+            vf = v.astype(jnp.float32) * vs_ref[0, :, 0][:, None]
+        else:
+            kf = k.astype(jnp.float32)
+            vf = v.astype(jnp.float32)
+        s = jax.lax.dot_general(q, kf, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                     # (G, tile)
+        pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
+        valid = pos < kl
+        if window is not None:
+            valid &= pos > (kl - 1 - window)
+        s = jnp.where(valid, s, NEG)
+        m_prev = m_scr[...]                                  # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                               # (G, tile)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+            p, vf, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(t_i == n_steps - 1)
+    def _finalize():
+        # empty slots (kv_len == 0) never accumulate: l stays 0 and the
+        # guarded divide emits exact zeros (the engine discards them)
+        o_ref[0, 0] = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "tile", "interpret"))
+def paged_attention_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           block_table: jax.Array, kv_len: jax.Array,
+                           k_scale_pool: Optional[jax.Array] = None,
+                           v_scale_pool: Optional[jax.Array] = None, *,
+                           window: Optional[int] = None, tile: int = 0,
+                           interpret: bool = False) -> jax.Array:
+    """q: (S, KVH, G, hd); pools: (P, page, KVH, hd[/hd_v]); block_table:
+    (S, W) page ids (-1 = unheld); kv_len: (S,) fill counts *including* the
+    current token (q sits at position kv_len-1). Scale pools (P, page, KVH)
+    mark int8 pools. Returns (S, KVH, G, hd_v) f32."""
+    s, kvh, g, hd = q.shape
+    page_size = k_pool.shape[1]
+    hd_v = v_pool.shape[-1]
+    w = block_table.shape[1]
+    tile = tile or page_size
+    assert page_size % tile == 0, (page_size, tile)
+    quant = k_scale_pool is not None
+    n_steps = w * (page_size // tile)
+    sm_scale = 1.0 / (hd ** 0.5)
+    geom = dict(page_size=page_size, tile=tile, window=window)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd), lambda s_, h_, t_, bt, kl: (s_, h_, 0, 0)),
+        pl.BlockSpec((1, tile, 1, hd), functools.partial(_page_map, **geom)),
+        pl.BlockSpec((1, tile, 1, hd_v), functools.partial(_page_map, **geom)),
+    ]
+    args = [q, k_pool, v_pool]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, tile, 1), functools.partial(_scale_map, **geom)),
+            pl.BlockSpec((1, tile, 1), functools.partial(_scale_map, **geom)),
+        ]
+        args += [k_scale_pool.astype(jnp.float32),
+                 v_scale_pool.astype(jnp.float32)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(s, kvh, n_steps),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, hd_v),
+                               lambda s_, h_, t_, bt, kl: (s_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),      # running max
+            pltpu.VMEM((g, 1), jnp.float32),      # running denominator
+            pltpu.VMEM((g, hd_v), jnp.float32),   # output accumulator
+        ],
+    )
+    kernel = functools.partial(_paged_attn_kernel, quant=quant,
+                               sm_scale=sm_scale, n_steps=n_steps, **geom)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, kvh, g, hd_v), jnp.float32),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), kv_len.astype(jnp.int32), *args)

@@ -1,0 +1,67 @@
+"""Shared fixtures for the paged-attention differential harness.
+
+Used by tests/test_kernel_parity.py and benchmarks/paged_attn_bench.py so
+the fused kernel's independent oracle — and the pool/block-table builder it
+is evaluated against — live in exactly one place: a geometry or oracle
+change cannot leave the benchmark measuring something the parity tests no
+longer verify.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import _dequant_kv, _quant_kv, attention_core
+from repro.serve.kvcache import contiguous_positions, gather_pages
+
+
+def build_paged_case(seed: int, s: int, w: int, ps: int, kvh: int, g: int,
+                     hd: int, fills, kv_bits: int):
+    """Random pools + block tables with per-slot fills 0..w*ps. Empty slots
+    hold no pages (block-table row all -1), like a retired/idle slot.
+    Returns (q, pools dict, block_table, kv_len)."""
+    rng = np.random.default_rng(seed)
+    n_pages = 1 + s * w
+    perm = rng.permutation(np.arange(1, n_pages))
+    bt = np.full((s, w), -1, np.int32)
+    nxt = 0
+    for si in range(s):
+        need = -(-int(fills[si]) // ps)
+        bt[si, :need] = perm[nxt:nxt + need]
+        nxt += need
+    kf = jnp.asarray(rng.normal(size=(n_pages, ps, kvh, hd)), jnp.float32)
+    vf = jnp.asarray(rng.normal(size=(n_pages, ps, kvh, hd)), jnp.float32)
+    if kv_bits == 8:
+        kq, ks = _quant_kv(kf)
+        vq, vs = _quant_kv(vf)
+        pools = dict(k_pool=kq, v_pool=vq, k_scale_pool=ks, v_scale_pool=vs)
+    else:
+        pools = dict(k_pool=kf.astype(jnp.bfloat16),
+                     v_pool=vf.astype(jnp.bfloat16),
+                     k_scale_pool=None, v_scale_pool=None)
+    q = jnp.asarray(rng.normal(size=(s, kvh * g, hd)), jnp.float32)
+    return q, pools, jnp.asarray(bt), jnp.asarray(fills, dtype=jnp.int32)
+
+
+def gather_oracle(q: jax.Array, pools: dict, bt: jax.Array,
+                  kv_len: jax.Array, window: Optional[int]) -> jax.Array:
+    """The PR-1 decode read: gather pages contiguous, dequant, dense einsum
+    (attention_core single-shot) — the fused kernel's independent oracle.
+    Note it emits garbage for empty slots (softmax over all-masked rows);
+    the fused kernel defines those as exact zeros."""
+    if pools["k_scale_pool"] is not None:
+        kg = _dequant_kv(gather_pages(pools["k_pool"], bt),
+                         gather_pages(pools["k_scale_pool"], bt), q.dtype)
+        vg = _dequant_kv(gather_pages(pools["v_pool"], bt),
+                         gather_pages(pools["v_scale_pool"], bt), q.dtype)
+    else:
+        kg = gather_pages(pools["k_pool"], bt)
+        vg = gather_pages(pools["v_pool"], bt)
+    kv_pos = contiguous_positions(kv_len, kg.shape[1])
+    o = attention_core(q[:, None], kg, vg, q_pos=(kv_len - 1)[:, None],
+                       kv_pos=kv_pos, causal=True, window=window,
+                       block_kv=1 << 30)
+    return o[:, 0]

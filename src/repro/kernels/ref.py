@@ -1,6 +1,8 @@
 """Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -42,6 +44,92 @@ def w8a8_matmul_ref(xq: jax.Array, qw: jax.Array, scale: jax.Array, *,
                      preferred_element_type=jnp.int32)
     return jnp.sum(acc.astype(jnp.float32) *
                    scale.astype(jnp.float32)[None], axis=1)
+
+
+def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        block_table: jax.Array, kv_len: jax.Array,
+                        k_scale_pool: Optional[jax.Array] = None,
+                        v_scale_pool: Optional[jax.Array] = None, *,
+                        window: Optional[int] = None,
+                        tile: int = 0) -> jax.Array:
+    """jnp mirror of kernels/paged_attention.py — same page-walk order, same
+    per-tile online-softmax updates, same f32 accumulation, so interpret-mode
+    kernel runs are bit-comparable on CPU. Dead tiles (beyond fill, unheld
+    pages, wholly behind the sliding window) leave the accumulators
+    untouched, exactly like the kernel's ``pl.when`` skip.
+
+    q: (S, KVH, G, hd); pools: (P, page, KVH, hd[/hd_v]); block_table:
+    (S, W); kv_len: (S,). Returns (S, KVH, G, hd_v) f32."""
+    s, kvh, g, hd = q.shape
+    page_size = k_pool.shape[1]
+    hd_v = v_pool.shape[-1]
+    w = block_table.shape[1]
+    tile = tile or page_size
+    assert page_size % tile == 0, (page_size, tile)
+    nt = page_size // tile
+    n_steps = w * nt
+    quant = k_scale_pool is not None
+    sm_scale = 1.0 / (hd ** 0.5)
+    neg = -1e30
+
+    def cell(qgh, bt_row, kl, h_idx):
+        """One (slot, kv-head) grid cell: walk the row's page tiles."""
+        qf = qgh.astype(jnp.float32)                         # (G, hd)
+
+        def step(carry, t):
+            m, l, acc = carry
+            wi, sub, base = t // nt, t % nt, (t // nt) * page_size + \
+                (t % nt) * tile
+            live = (base < kl) & (bt_row[wi] >= 0)
+            if window is not None:
+                live &= (base + tile) > (kl - window)
+            page = jnp.where(live, jnp.maximum(bt_row[wi], 0), 0)
+            k = jax.lax.dynamic_slice(
+                k_pool, (page, sub * tile, h_idx, 0),
+                (1, tile, 1, hd))[0, :, 0, :]                # (tile, hd)
+            v = jax.lax.dynamic_slice(
+                v_pool, (page, sub * tile, h_idx, 0),
+                (1, tile, 1, hd_v))[0, :, 0, :]              # (tile, hd_v)
+            if quant:
+                ks = jax.lax.dynamic_slice(
+                    k_scale_pool, (page, sub * tile, h_idx),
+                    (1, tile, 1))[0, :, 0].astype(jnp.float32)
+                vs = jax.lax.dynamic_slice(
+                    v_scale_pool, (page, sub * tile, h_idx),
+                    (1, tile, 1))[0, :, 0].astype(jnp.float32)
+                kf = k.astype(jnp.float32) * ks[:, None]
+                vf = v.astype(jnp.float32) * vs[:, None]
+            else:
+                kf = k.astype(jnp.float32)
+                vf = v.astype(jnp.float32)
+            sc = jax.lax.dot_general(qf, kf, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+            sc = sc * sm_scale                               # (G, tile)
+            pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
+            valid = pos < kl
+            if window is not None:
+                valid &= pos > (kl - 1 - window)
+            sc = jnp.where(valid, sc, neg)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1, keepdims=True))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * corr + jnp.dot(p, vf,
+                                           preferred_element_type=jnp.float32)
+            keep = lambda new, old: jnp.where(live, new, old)
+            return (keep(m_new, m), keep(l_new, l), keep(acc_new, acc)), None
+
+        init = (jnp.full((g, 1), neg, jnp.float32),
+                jnp.zeros((g, 1), jnp.float32),
+                jnp.zeros((g, hd_v), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(step, init,
+                                      jnp.arange(n_steps, dtype=jnp.int32))
+        return acc / jnp.maximum(l, 1e-30)
+
+    heads = jnp.arange(kvh, dtype=jnp.int32)
+    per_slot = jax.vmap(cell, in_axes=(0, None, None, 0))    # over kv-heads
+    return jax.vmap(per_slot, in_axes=(0, 0, 0, None))(
+        q, block_table.astype(jnp.int32), kv_len.astype(jnp.int32), heads)
 
 
 def channel_stats_ref(x: jax.Array):

@@ -71,7 +71,8 @@ def run_continuous(cfg, params, work, args):
     max_len = bucket_up + args.max_new_max
     eng = ContinuousEngine(cfg, params, n_slots=args.slots,
                            max_len=max_len, page_size=args.page_size,
-                           prefill_bucket=args.prefill_bucket)
+                           prefill_bucket=args.prefill_bucket,
+                           paged_attn=args.paged_attn)
     # warm the jit caches — every prefill bucket in the workload, decoded
     # both shallow and to full depth so the common (k, width) decode-scan
     # shapes compile before timing (odd depth/remaining combos in the real
@@ -141,6 +142,10 @@ def main():
                     help="Poisson arrival rate, req/s (0 = all at t=0)")
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--paged-attn", default=None,
+                    choices=["fused", "gather"],
+                    help="decode attention path: fused paged-attention "
+                         "kernel (config default) or the gather oracle")
     ap.add_argument("--prefill-bucket", type=int, default=16)
     ap.add_argument("--prompt-len-min", type=int, default=8)
     ap.add_argument("--prompt-len-max", type=int, default=64)

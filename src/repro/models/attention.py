@@ -10,9 +10,13 @@ KV caches:
   * sliding-window (Mixtral SWA): same structure with Smax = window; writes
     wrap modulo window (ring buffer), masking is driven by the "pos" array.
   * paged (continuous batching): {"k_pool","v_pool": (P, page, KVH, hd)};
-    reads gather the slot's pages via the block table threaded in through
-    `paged`, with mask positions derived from per-slot fill counts
-    (see serve/kvcache.py, DESIGN.md).
+    decode runs the fused Pallas paged-attention kernel by default
+    (cfg.paged_attn_impl == "fused"): the kernel walks the slot's block
+    table directly and dequantizes int8 K/V inline, so no gathered
+    (S, maxp*page, ...) view is ever materialized. `paged_attn_impl ==
+    "gather"` keeps the gather->dequant->einsum oracle path, which also
+    serves paged *prefill* (see serve/kvcache.py, DESIGN.md
+    "Paged-attention decode kernel").
 RoPE is applied before cache insertion (post-rope keys are cached).
 """
 from __future__ import annotations
@@ -23,10 +27,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import lc
+from repro.kernels.ops import paged_attention
 from repro.models.config import ModelConfig
 from repro.models.linear import dense, init_dense
 from repro.models.rope import apply_rope
-from repro.serve.kvcache import (PageSpec, contiguous_positions, gather_pages,
+from repro.serve.kvcache import (PageSpec, contiguous_positions,
+                                 gather_dequant_pages, gather_pages,
                                  prefill_page_index)
 
 NEG = -1e30
@@ -244,27 +250,40 @@ def _paged_update(cache: dict, k, v, positions, paged: dict):
                 v.astype(cache["v_pool"].dtype))
         return new, (k, v, positions)
     bt = paged["block_table"]                                 # decode step
-    wp, wo = paged["write_page"], paged["write_off"]
+    new = _paged_write_decode(cache, k, v, paged)
     if quant:
+        # one gather+dequant call per pool (see gather_dequant_pages)
+        kg = gather_dequant_pages(new["k_pool"], new["k_scale_pool"], bt,
+                                  k.dtype)
+        vg = gather_dequant_pages(new["v_pool"], new["v_scale_pool"], bt,
+                                  v.dtype)
+    else:
+        kg = gather_pages(new["k_pool"], bt)
+        vg = gather_pages(new["v_pool"], bt)
+    kv_pos = contiguous_positions(paged["kv_len"], kg.shape[1])
+    return new, (kg, vg, kv_pos)
+
+
+def _paged_write_decode(cache: dict, k, v, paged: dict) -> dict:
+    """Scatter one decode token per slot at (write_page, write_off).
+
+    Shared by the fused-kernel and gather decode paths — the fused path
+    stops here and hands the pools straight to kernels/paged_attention."""
+    new = dict(cache)
+    wp, wo = paged["write_page"], paged["write_off"]
+    if "k_scale_pool" in cache:
         kq, ks = _quant_kv(k)
         vq, vs = _quant_kv(v)
         new["k_pool"] = cache["k_pool"].at[wp, wo].set(kq[:, 0])
         new["v_pool"] = cache["v_pool"].at[wp, wo].set(vq[:, 0])
         new["k_scale_pool"] = cache["k_scale_pool"].at[wp, wo].set(ks[:, 0])
         new["v_scale_pool"] = cache["v_scale_pool"].at[wp, wo].set(vs[:, 0])
-        kg = _dequant_kv(gather_pages(new["k_pool"], bt),
-                         gather_pages(new["k_scale_pool"], bt), k.dtype)
-        vg = _dequant_kv(gather_pages(new["v_pool"], bt),
-                         gather_pages(new["v_scale_pool"], bt), v.dtype)
     else:
         new["k_pool"] = cache["k_pool"].at[wp, wo].set(
             k[:, 0].astype(cache["k_pool"].dtype))
         new["v_pool"] = cache["v_pool"].at[wp, wo].set(
             v[:, 0].astype(cache["v_pool"].dtype))
-        kg = gather_pages(new["k_pool"], bt)
-        vg = gather_pages(new["v_pool"], bt)
-    kv_pos = contiguous_positions(paged["kv_len"], kg.shape[1])
-    return new, (kg, vg, kv_pos)
+    return new
 
 
 def _quant_kv(x: jax.Array):
@@ -339,6 +358,7 @@ def apply_attention(cfg: ModelConfig, p: dict, x: jax.Array, *,
     q = lc(q, "batch", "seq", "heads", "head_dim")
     q = apply_rope(q, positions, theta=cfg.rope_theta, variant=rope_variant)
 
+    fused_o = None
     if (cache is not None and "len" not in cache and "k_pool" not in cache
             and kv_src is None):
         # precomputed cross-attention K/V (whisper decode)
@@ -352,7 +372,21 @@ def apply_attention(cfg: ModelConfig, p: dict, x: jax.Array, *,
         v = dense(p["wv"], src).reshape(kv_b, kv_s, kvh, hd)
         kpos = kv_positions if kv_positions is not None else positions
         k = apply_rope(k, kpos, theta=cfg.rope_theta, variant=rope_variant)
-        if cache is not None and "k_pool" in cache:
+        if (cache is not None and "k_pool" in cache
+                and paged is not None and "block_table" in paged
+                and s == 1 and cfg.paged_attn_impl == "fused"):
+            # fused paged decode: scatter the new token into the pools, then
+            # walk the block table *inside* the kernel — int8 K/V dequantized
+            # inline from the scale pools, no gathered (S, maxp*page, ...)
+            # view in HBM, dead pages never read
+            new_cache = _paged_write_decode(cache, k, v, paged)
+            fused_o = paged_attention(
+                q[:, 0], new_cache["k_pool"], new_cache["v_pool"],
+                paged["block_table"], paged["kv_len"],
+                k_scale_pool=new_cache.get("k_scale_pool"),
+                v_scale_pool=new_cache.get("v_scale_pool"),
+                window=window, out_dtype=q.dtype)[:, None]
+        elif cache is not None and "k_pool" in cache:
             # paged cache (continuous batching): scatter new K/V into the
             # page pool, read back via the slot block tables
             assert paged is not None, \
@@ -384,15 +418,17 @@ def apply_attention(cfg: ModelConfig, p: dict, x: jax.Array, *,
         else:
             new_cache = None
             kv_pos = kpos
-    k = lc(k, "batch", "kv_seq", "kv_heads", "head_dim")
-    v = lc(v, "batch", "kv_seq", "kv_heads", "head_dim")
-
-    o = attention_core(q, k, v, q_pos=positions, kv_pos=kv_pos,
-                       causal=causal, window=window,
-                       block_kv=cfg.attn_block_kv,
-                       banded=cfg.banded_window_attn,
-                       chunked_decode=cfg.chunked_decode,
-                       scores_dtype=jnp.dtype(cfg.attn_scores_dtype))
+    if fused_o is not None:
+        o = fused_o                                        # (B, 1, H, hd_v)
+    else:
+        k = lc(k, "batch", "kv_seq", "kv_heads", "head_dim")
+        v = lc(v, "batch", "kv_seq", "kv_heads", "head_dim")
+        o = attention_core(q, k, v, q_pos=positions, kv_pos=kv_pos,
+                           causal=causal, window=window,
+                           block_kv=cfg.attn_block_kv,
+                           banded=cfg.banded_window_attn,
+                           chunked_decode=cfg.chunked_decode,
+                           scores_dtype=jnp.dtype(cfg.attn_scores_dtype))
     o = o.reshape(b, s, h * hd)
     if taps is not None:
         taps[tap_prefix + "wo"] = o

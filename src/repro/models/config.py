@@ -115,6 +115,10 @@ class ModelConfig:
     attn_scores_dtype: str = "float32"  # bfloat16 halves score HBM traffic
     moe_impl: str = "spmd"          # spmd | shard_map (explicit all-to-all EP)
     kv_cache_bits: int = 0          # 8: int8 KV cache (≈2x capacity/bandwidth)
+    paged_attn_impl: str = "fused"  # fused: block-table-walking decode kernel
+                                    # (kernels/paged_attention.py, inline int8
+                                    # dequant); gather: gather->dequant->einsum
+                                    # oracle path
     remat: bool = True
     attn_block_kv: int = 512        # chunked-attention kv block
     # --- distribution knobs (consumed by distributed/sharding.py) ---

@@ -18,7 +18,12 @@ engines share the model code:
                          requests stop burning decode FLOPs. All jitted
                          shapes are static (slot count, page pool, bucketed
                          prefill lengths), so steady-state serving never
-                         recompiles.
+                         recompiles. Decode attention runs the fused
+                         paged-attention kernel by default (block-table walk
+                         + inline int8-KV dequant inside the kernel); pass
+                         paged_attn="gather" for the gather->dequant->einsum
+                         oracle path (see DESIGN.md "Paged-attention decode
+                         kernel").
 
 The traffic driver (Poisson arrivals, latency percentiles) lives in
 launch/serve.py; admission policy lives in serve/scheduler.py.
@@ -208,9 +213,17 @@ class ContinuousEngine:
                  decode_block: int = 8,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  quant_bits: int = 0, quant_group: int = 0,
-                 act_bits: int = 0):
+                 act_bits: int = 0, paged_attn: Optional[str] = None):
         if cfg.enc_dec:
             raise NotImplementedError("paged serving covers decoder-only LMs")
+        if paged_attn is not None:
+            # per-engine override of the decode attention path: "fused"
+            # (paged-attention kernel) or "gather" (oracle). Threaded via
+            # the config because the dispatch lives in models/attention.py.
+            if paged_attn not in ("fused", "gather"):
+                raise ValueError(f"paged_attn must be 'fused' or 'gather', "
+                                 f"got {paged_attn!r}")
+            cfg = cfg.replace(paged_attn_impl=paged_attn)
         self.cfg = cfg
         self.params = _maybe_quantize(cfg, params, quant_bits, quant_group,
                                       act_bits)

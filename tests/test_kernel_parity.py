@@ -19,6 +19,10 @@ import pytest
 from repro.core.quant.types import (compute_scales, dequantize, quantize,
                                     quantize_activation, quantize_stacked)
 from repro.kernels import ops, ref
+from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.paged_harness import build_paged_case, gather_oracle
+from repro.models.attention import _quant_kv
+from repro.serve.kvcache import gather_dequant_pages, gather_pages
 
 BITS = [2, 4, 8]
 GROUPS = [-1, 32, 64, 128]
@@ -158,6 +162,139 @@ def test_dequant_matmul_adversarial_group_size():
                                    k=768)
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------- paged attention
+
+# (S, W, ps, kvh, g, hd, fills, window): M=1 single-slot decode; ragged
+# per-slot kv_len with an empty slot, a page-boundary fill (== ps) and a
+# full table; GQA group > 1; SWA windows that skip whole pages
+PAGED_CASES = [
+    (1, 2, 8, 1, 1, 32, (9,), None),
+    (4, 4, 8, 2, 3, 32, (0, 1, 8, 32), None),
+    (3, 4, 8, 2, 2, 16, (5, 16, 29), 7),
+    (2, 6, 16, 1, 4, 64, (33, 96), 20),
+]
+
+
+# pool/block-table builder + gather+einsum oracle are shared with
+# benchmarks/paged_attn_bench.py via kernels/paged_harness.py
+def _build_paged(seed, s, w, ps, kvh, g, hd, fills, kv_bits):
+    return build_paged_case(seed, s, w, ps, kvh, g, hd, fills, kv_bits)
+
+
+def _gather_oracle(q, pools, bt, kv_len, window):
+    return np.asarray(gather_oracle(q, pools, bt, kv_len, window), np.float32)
+
+
+@pytest.mark.parametrize("kv_bits", [0, 8])
+@pytest.mark.parametrize("case", PAGED_CASES)
+def test_paged_attention_parity(kv_bits, case):
+    s, w, ps, kvh, g, hd, fills, window = case
+    q, pools, bt, kv_len = _build_paged(sum(case[:6]) + kv_bits, s, w, ps,
+                                        kvh, g, hd, fills, kv_bits)
+    out = np.asarray(ops.paged_attention(
+        q, pools["k_pool"], pools["v_pool"], bt, kv_len,
+        k_scale_pool=pools["k_scale_pool"],
+        v_scale_pool=pools["v_scale_pool"], window=window))
+    orc = _gather_oracle(q, pools, bt, kv_len, window)
+    live = np.asarray(kv_len) > 0
+    # the oracle emits garbage for empty slots (softmax over all-masked);
+    # the fused kernel defines them as exact zeros
+    np.testing.assert_allclose(out[live], orc[live], rtol=2e-2, atol=2e-2)
+    assert np.all(out[~live] == 0.0)
+
+
+@pytest.mark.parametrize("kv_bits", [0, 8])
+def test_paged_attention_interpret_matches_ref_exactly(kv_bits):
+    """The interpret-mode kernel is bit-comparable with the jnp page-walk
+    reference (same walk order, same f32 accumulation) — exact for bf16 KV
+    and for int8 KV alike on CPU."""
+    s, w, ps, kvh, g, hd, fills, window = PAGED_CASES[2]
+    q, pools, bt, kv_len = _build_paged(17 + kv_bits, s, w, ps, kvh, g, hd,
+                                        fills, kv_bits)
+    qg = q.reshape(s, kvh, g, hd)
+    for win in (window, None):
+        ker = paged_attention_pallas(
+            qg, pools["k_pool"], pools["v_pool"], bt, kv_len,
+            pools["k_scale_pool"], pools["v_scale_pool"], window=win,
+            tile=ps, interpret=True)
+        rr = ref.paged_attention_ref(
+            qg, pools["k_pool"], pools["v_pool"], bt, kv_len,
+            pools["k_scale_pool"], pools["v_scale_pool"], window=win,
+            tile=ps)
+        np.testing.assert_array_equal(np.asarray(ker), np.asarray(rr))
+
+
+def test_paged_attention_subpage_tiles_match_whole_page():
+    """Splitting oversized pages into sub-tiles (read-width regime) walks
+    the same tokens: tile=ps/2 must match the gather oracle too."""
+    s, w, ps, kvh, g, hd, fills, window = PAGED_CASES[1]
+    q, pools, bt, kv_len = _build_paged(23, s, w, ps, kvh, g, hd, fills, 8)
+    qg = q.reshape(s, kvh, g, hd)
+    out = paged_attention_pallas(
+        qg, pools["k_pool"], pools["v_pool"], bt, kv_len,
+        pools["k_scale_pool"], pools["v_scale_pool"], window=window,
+        tile=ps // 2, interpret=True).reshape(s, kvh * g, hd)
+    orc = _gather_oracle(q, pools, bt, kv_len, window)
+    live = np.asarray(kv_len) > 0
+    np.testing.assert_allclose(np.asarray(out)[live], orc[live],
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_paged_tile_regime():
+    """Common serving pages ride whole; oversized pages split to <=256."""
+    assert ops._paged_tile(8) == 8
+    assert ops._paged_tile(16) == 16
+    assert ops._paged_tile(256) == 256
+    assert ops._paged_tile(512) == 256
+    assert ops._paged_tile(1024) == 256
+
+
+# hypothesis property: quantize -> page-write -> kernel-read round trip.
+# Guarded import so tier-1 collection stays green without the dev extra.
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                      # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000), s=st.integers(1, 4),
+           w=st.integers(1, 4), logps=st.integers(2, 4),
+           scale_mag=st.floats(0.01, 10.0))
+    def test_paged_int8_roundtrip_error_bound(seed, s, w, logps, scale_mag):
+        """int8 KV written through the page pool and read back (the
+        single-pass gather_dequant_pages) stays within the per-(token,
+        head) quantization bound scale/2 = amax/254; and the fused kernel
+        reads exactly those dequantized values — its output matches the
+        gather oracle over the same pool to f32 tolerance."""
+        ps = 1 << logps
+        kvh, g, hd = 2, 2, 16
+        rng = np.random.default_rng(seed)
+        fills = tuple(int(rng.integers(0, w * ps + 1)) for _ in range(s))
+        q, pools, bt, kv_len = _build_paged(seed, s, w, ps, kvh, g, hd,
+                                            fills, 8)
+        # re-quantize a known float pool at this magnitude for the bound
+        x = jnp.asarray(rng.normal(size=(1 + s * w, ps, kvh, hd)) * scale_mag,
+                        jnp.float32)
+        xq, xs = _quant_kv(x)
+        back = gather_dequant_pages(xq, xs, bt, jnp.float32)
+        orig = gather_pages(x, bt)
+        bound = np.asarray(gather_pages(xs[..., None], bt))[..., 0] / 2.0
+        err = np.abs(np.asarray(back) - np.asarray(orig))
+        assert np.all(err <= bound[..., None] * (1 + 1e-5) + 1e-7)
+        # kernel-read leg: fused output over the written pool == oracle
+        out = np.asarray(ops.paged_attention(
+            q, pools["k_pool"], pools["v_pool"], bt, kv_len,
+            k_scale_pool=pools["k_scale_pool"],
+            v_scale_pool=pools["v_scale_pool"]))
+        orc = _gather_oracle(q, pools, bt, kv_len, None)
+        live = np.asarray(kv_len) > 0
+        np.testing.assert_allclose(out[live], orc[live], rtol=1e-4,
+                                   atol=1e-4)
 
 
 # ------------------------------------------------- MoE forward integration

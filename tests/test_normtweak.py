@@ -111,6 +111,56 @@ def test_tweak_reduces_dist_loss(tiny_setup):
     assert all(np.isfinite(v) for v in stats["layer_loss"])
 
 
+def test_tweak_scan_matches_per_chunk_loop(tiny_setup):
+    """The fused lax.scan inner loop (_tweak_scan, one dispatch per layer
+    with donated buffers) must produce the same final norms as the
+    per-chunk _tweak_step loop it replaced — same chunk order, same math."""
+    from repro.core.normtweak.pipeline import _tweak_scan, _tweak_step
+    from repro.core.normtweak.schedule import layer_lr
+    from repro.core.quant.blockquant import quantize_block
+    from repro.models.transformer import _embed, block_spec, get_block
+    from repro.optim.adam import adam_init
+    from repro.utils.tree import tree_partition
+
+    params, calib = tiny_setup
+    n, s = calib.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (n, s))
+    x0 = _embed(CFG, params, calib, None, positions)
+    spec, bp = block_spec(CFG, 0), get_block(CFG, params, 0)
+    from repro.models.blocks import apply_block
+    fout, _, _ = apply_block(CFG, spec, bp, x0, positions=positions,
+                             mode="train")
+    taps = {}
+    apply_block(CFG, spec, bp, x0, positions=positions, mode="train",
+                taps=taps)
+    qbp = quantize_block(bp, taps, method="rtn", bits=4, group_size=-1)
+    norms0, rest = tree_partition(qbp, is_norm_path)
+    lr = layer_lr(1e-3, 10.0, 0, CFG.n_layers)
+    sb, iters = 2, 2
+    assert n % sb == 0                      # the fused path's precondition
+
+    loop_norms, loop_state = norms0, adam_init(norms0)
+    for _ in range(iters):
+        for s0 in range(0, n, sb):
+            loop_norms, loop_state, loop_loss = _tweak_step(
+                CFG, spec, "dist", loop_norms, rest, loop_state,
+                x0[s0:s0 + sb], fout[s0:s0 + sb], positions[s0:s0 + sb], lr)
+
+    chunk = lambda a: a.reshape((n // sb, sb) + a.shape[1:])
+    scan_norms, _, scan_loss = _tweak_scan(
+        CFG, spec, "dist", norms0, rest, adam_init(norms0), chunk(x0),
+        chunk(fout), chunk(positions), lr, iters=iters)
+
+    flat_l = jax.tree_util.tree_leaves_with_path(loop_norms)
+    flat_s = jax.tree_util.tree_leaves_with_path(scan_norms)
+    assert len(flat_l) == len(flat_s) > 0
+    for (pl_, a), (ps_, b) in zip(flat_l, flat_s):
+        assert jax.tree_util.keystr(pl_) == jax.tree_util.keystr(ps_)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=jax.tree_util.keystr(pl_))
+    np.testing.assert_allclose(float(scan_loss), float(loop_loss), rtol=1e-6)
+
+
 def test_divergence_metric_positive_after_quant(tiny_setup):
     params, calib = tiny_setup
     nt = NTConfig(method="rtn", bits=2, group_size=16, tweak=False)
