@@ -49,16 +49,22 @@ def build_params(cfg, args):
 
 
 def make_workload(cfg, args):
-    """Poisson arrivals with uniform prompt-length / decode-length mix."""
+    """Poisson arrivals with uniform prompt-length / decode-length mix.
+
+    `--shared-prefix N` models system-prompt traffic: every request's
+    prompt starts with the same N tokens (the prefix cache's target
+    workload) followed by a unique tail."""
     rng = np.random.default_rng(args.seed)
     inter = (rng.exponential(1.0 / args.rate, args.requests)
              if args.rate > 0 else np.zeros(args.requests))
     arrivals = np.cumsum(inter)
+    system = rng.integers(0, cfg.vocab_size, args.shared_prefix)
     work = []
     for i in range(args.requests):
         plen = int(rng.integers(args.prompt_len_min, args.prompt_len_max + 1))
         mnew = int(rng.integers(args.max_new_min, args.max_new_max + 1))
-        prompt = rng.integers(0, cfg.vocab_size, plen)
+        prompt = np.concatenate(
+            [system, rng.integers(0, cfg.vocab_size, plen)])
         work.append((prompt, mnew, float(arrivals[i])))
     return work
 
@@ -66,24 +72,43 @@ def make_workload(cfg, args):
 def run_continuous(cfg, params, work, args):
     # per-slot capacity must cover a bucket-padded prompt plus max decode,
     # or the bucket-length warm-up requests below would overflow it
-    bucket_up = -(-args.prompt_len_max // args.prefill_bucket) \
-        * args.prefill_bucket
+    plen_max = max(len(p) for p, _, _ in work)
+    bucket_up = -(-plen_max // args.prefill_bucket) * args.prefill_bucket
     max_len = bucket_up + args.max_new_max
     eng = ContinuousEngine(cfg, params, n_slots=args.slots,
                            max_len=max_len, page_size=args.page_size,
                            prefill_bucket=args.prefill_bucket,
-                           paged_attn=args.paged_attn)
+                           paged_attn=args.paged_attn,
+                           prefix_share=args.prefix_share,
+                           chunked_prefill=args.chunked_prefill)
     # warm the jit caches — every prefill bucket in the workload, decoded
     # both shallow and to full depth so the common (k, width) decode-scan
     # shapes compile before timing (odd depth/remaining combos in the real
     # traffic can still hit a fresh shape mid-run)
     buckets = sorted({eng._bucket(len(p)) for p, _, _ in work})
-    for b in buckets:
-        for mn in {2, args.max_new_max}:
-            eng.submit(np.zeros(b, np.int64), max_new=mn)
-    eng.run(max_steps=10_000)
-    print(f"warmed {len(buckets)} prefill buckets: {buckets}")
-    eng.n_decode_steps = eng.n_prefills = 0     # report the timed run only
+    waves = 2 if args.prefix_share else 1
+    shared_floor = ((args.shared_prefix // args.page_size) * args.page_size
+                    if args.prefix_share else 0)
+    for wave in range(waves):
+        # with prefix sharing, the first wave registers its prompts and a
+        # second wave prefix-hits exactly the system-prefix floor (its
+        # tails differ, like real traffic), compiling the gathered-context
+        # suffix-prefill shapes the timed run will take
+        for b in buckets:
+            for mn in {2, args.max_new_max}:
+                p = np.zeros(b, np.int64)
+                if wave > 0 and 0 < shared_floor < b:
+                    p[shared_floor:] = 1
+                eng.submit(p, max_new=mn)
+        eng.run(max_steps=10_000)
+    print(f"warmed {len(buckets)} prefill buckets "
+          f"({waves} wave{'s' if waves > 1 else ''}): {buckets}")
+    # report the timed run only: reset the counters and drop the warm-up
+    # prompts' cache registrations, so cached-page stats and eviction
+    # behaviour reflect measured traffic alone
+    eng.n_decode_steps = eng.n_prefills = 0
+    eng.n_prefill_tokens = eng.n_shared_tokens = 0
+    eng.pool.clear_prefix_cache()
 
     for prompt, max_new, arrival in work:
         eng.submit(prompt, max_new=max_new, arrival=arrival)
@@ -96,6 +121,9 @@ def run_continuous(cfg, params, work, args):
     print(f"continuous: {len(done)} requests, {total_tok} tokens in {dt:.2f}s "
           f"({total_tok / dt:.1f} tok/s; {eng.n_decode_steps} decode steps, "
           f"{eng.n_prefills} prefills)")
+    print(f"  prefilled {eng.n_prefill_tokens} prompt tokens, "
+          f"{eng.n_shared_tokens} reused from the prefix cache "
+          f"({eng.pool.n_cached} pages cached)")
     print(f"  latency  p50 {_pct(lat, 50):.3f}s  p90 {_pct(lat, 90):.3f}s  "
           f"p99 {_pct(lat, 99):.3f}s")
     print(f"  ttft     p50 {_pct(ttft, 50):.3f}s  p99 {_pct(ttft, 99):.3f}s")
@@ -147,6 +175,16 @@ def main():
                     help="decode attention path: fused paged-attention "
                          "kernel (config default) or the gather oracle")
     ap.add_argument("--prefill-bucket", type=int, default=16)
+    ap.add_argument("--prefix-share", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="reuse full prompt-prefix pages across requests "
+                         "(attention-only archs)")
+    ap.add_argument("--chunked-prefill", type=int, default=0,
+                    help="max tokens per prefill chunk, page-aligned "
+                         "(0 = whole prompt in one call)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a common system prompt of this many "
+                         "tokens to every request")
     ap.add_argument("--prompt-len-min", type=int, default=8)
     ap.add_argument("--prompt-len-max", type=int, default=64)
     ap.add_argument("--max-new-min", type=int, default=8)

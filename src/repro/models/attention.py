@@ -224,18 +224,25 @@ def _paged_update(cache: dict, k, v, positions, paged: dict):
 
     Prefill (paged has "bt_rows"): writes a batch of admitted slots'
     (left-padded) prompts; the read view is the current sequence itself — a
-    fresh request attends only to its own prompt. Decode (paged has
+    fresh request attends only to its own prompt. Chunked / prefix-suffix
+    prefill (paged additionally has "kv_len": per-row total fill counts
+    after this chunk) instead gathers the whole 0..kv_len-1 context back
+    through the block-table rows, because earlier tokens live in pages the
+    current call never saw — the slot's own earlier chunks, or shared
+    prefix pages written by another request entirely. Decode (paged has
     "block_table"): writes one token per slot at (write_page, write_off),
     then gathers each slot's pages into a contiguous (S, width*page, ...)
     view for attention, with mask positions derived from the per-slot fill
-    counts in paged["kv_len"]. The block table passed for decode may be
-    truncated to the live read width (pow2 pages) by the engine.
+    counts in paged["kv_len"]. Block tables passed for decode and chunked
+    prefill may be truncated to the live read width (pow2 pages) by the
+    engine.
     """
     new = dict(cache)
     quant = "k_scale_pool" in cache
     if "bt_rows" in paged:                          # prefill (batch of slots)
+        bt = paged["bt_rows"]
         ps = cache["k_pool"].shape[1]
-        pages, offs = prefill_page_index(paged["bt_rows"], positions, ps)
+        pages, offs = prefill_page_index(bt, positions, ps)
         if quant:
             kq, ks = _quant_kv(k)
             vq, vs = _quant_kv(v)
@@ -248,7 +255,18 @@ def _paged_update(cache: dict, k, v, positions, paged: dict):
                 k.astype(cache["k_pool"].dtype))
             new["v_pool"] = cache["v_pool"].at[pages, offs].set(
                 v.astype(cache["v_pool"].dtype))
-        return new, (k, v, positions)
+        if "kv_len" not in paged:           # fresh full prompt: self-attend
+            return new, (k, v, positions)
+        if quant:
+            kg = gather_dequant_pages(new["k_pool"], new["k_scale_pool"],
+                                      bt, k.dtype)
+            vg = gather_dequant_pages(new["v_pool"], new["v_scale_pool"],
+                                      bt, v.dtype)
+        else:
+            kg = gather_pages(new["k_pool"], bt)
+            vg = gather_pages(new["v_pool"], bt)
+        kv_pos = contiguous_positions(paged["kv_len"], kg.shape[1])
+        return new, (kg, vg, kv_pos)
     bt = paged["block_table"]                                 # decode step
     new = _paged_write_decode(cache, k, v, paged)
     if quant:

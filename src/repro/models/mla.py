@@ -104,6 +104,13 @@ def apply_mla(cfg: ModelConfig, p: dict, x: jax.Array, *,
     new_cache = cache
     paged_view = None
     if cache is not None and "k_pool" in cache:
+        if not decode and paged is not None and "kv_len" in paged:
+            # chunked / prefix-suffix prefill hands back a gathered latent
+            # context, but the non-absorbed prefill below attends only to
+            # the current chunk's materialized K/V — silently wrong, so
+            # refuse (the engine gates MLA off these features already)
+            raise NotImplementedError(
+                "chunked/prefix-shared prefill is not supported for MLA")
         new_cache, paged_view = _paged_update(
             cache, c_kv[:, :, None, :], k_pe[:, :, None, :], positions, paged)
     elif cache is not None:

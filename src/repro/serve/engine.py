@@ -42,7 +42,7 @@ from repro.models.config import ModelConfig
 from repro.models.transformer import (init_cache, lm_decode, lm_forward,
                                       lm_prefill)
 from repro.serve.kvcache import PagePool, PageSpec, default_page_spec
-from repro.serve.sampling import sample, sample_np
+from repro.serve.sampling import sample
 from repro.serve.scheduler import Request, Scheduler
 
 
@@ -138,6 +138,18 @@ def _paged_prefill_jit(cfg, params, tokens, cache, positions, paged):
                       paged=paged)
 
 
+@functools.partial(jax.jit, static_argnames=("temperature", "top_k"))
+def _sample_first_jit(logits, keys, *, temperature, top_k):
+    """Per-request first-token sampling: logits (B, V), keys (B, 2).
+
+    Each row draws from its own key (folded from the request id by the
+    engine), so the result does not depend on how admitted requests were
+    grouped into prefill batches — the same seed gives the same tokens at
+    prefill_batch=1 and prefill_batch=8."""
+    return jax.vmap(lambda l, k: sample(l[None], k, temperature=temperature,
+                                        top_k=top_k)[0])(logits, keys)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "k_steps", "page_size",
                                     "temperature", "top_k"),
@@ -188,16 +200,30 @@ class ContinuousEngine:
     bookkeeping are delegated to serve/scheduler.py. One `step()`:
 
       1. retire-then-admit: the scheduler maps queued requests onto free
-         slots (whole-budget page allocation, FIFO);
-      2. newly admitted requests are prefilled into their slots — jitted
-         calls batched per prompt-length bucket (pow2 batch sizes, capped
-         at `prefill_batch`) that scatter K/V into the admitted slots'
-         pages while every other slot's cache state is untouched;
+         slots (FIFO; whole-budget page allocation minus any prefix-cache
+         hit — see below);
+      2. slots still ingesting their prompt advance by one prefill chunk —
+         jitted calls batched per chunk-length bucket (pow2 batch sizes,
+         capped at `prefill_batch`) that scatter K/V into the admitted
+         slots' pages while every other slot's cache state is untouched;
+         a slot whose prompt completes samples its first token and joins
+         the decode set;
       3. one fused block of `decode_block` lockstep decode steps over all
          slots (a device-side lax.scan with on-device sampling — one
-         dispatch and one host sync per K tokens). Idle slots write to the
-         scratch page and are masked; slots finishing mid-block overshoot
-         onto the scratch page and the surplus tokens are dropped.
+         dispatch and one host sync per K tokens). Idle and mid-prefill
+         slots write to the scratch page and are masked; slots finishing
+         mid-block overshoot onto the scratch page and the surplus tokens
+         are dropped.
+
+    `prefix_share=True` turns on the pool's prefix cache: a prompt whose
+    full-page prefix was already prefilled by an earlier request reuses
+    those pages by reference and prefills only the unshared suffix.
+    `chunked_prefill=N` caps each prefill call at N tokens (rounded to a
+    page multiple), spreading a long prompt across `step()` ticks so
+    decode slots keep stepping instead of stalling behind it. Both
+    features need the gathered-context prefill read path and per-page
+    prompt state, so they cover attention-only decoders (no SSM state, no
+    MLA latent prefill). See DESIGN.md "Prefix cache & chunked prefill".
 
     `prefill_bucket` trades compile count for pad waste: prompts are
     left-padded (pos = -1, masked everywhere) up to the next multiple.
@@ -213,9 +239,21 @@ class ContinuousEngine:
                  decode_block: int = 8,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  quant_bits: int = 0, quant_group: int = 0,
-                 act_bits: int = 0, paged_attn: Optional[str] = None):
+                 act_bits: int = 0, paged_attn: Optional[str] = None,
+                 prefix_share: bool = False, chunked_prefill: int = 0):
         if cfg.enc_dec:
             raise NotImplementedError("paged serving covers decoder-only LMs")
+        if prefix_share or chunked_prefill:
+            has_ssm = any(spec.kind != "attn"
+                          for spec in cfg.prefix_pattern + cfg.pattern)
+            if has_ssm or cfg.attention == "mla":
+                # SSM state is not page-addressed (a shared page carries no
+                # recurrence state) and MLA's non-absorbed prefill never
+                # reads the paged latent back — both would be silently
+                # wrong, so refuse up front
+                raise NotImplementedError(
+                    "prefix_share/chunked_prefill cover attention-only "
+                    "decoders (no SSM blocks, no MLA)")
         if paged_attn is not None:
             # per-engine override of the decode attention path: "fused"
             # (paged-attention kernel) or "gather" (oracle). Threaded via
@@ -237,23 +275,32 @@ class ContinuousEngine:
         self.decode_block = max(1, decode_block)
         self.temperature = temperature
         self.top_k = top_k
+        self.prefix_share = bool(prefix_share)
+        # chunk sizes are page-aligned so every chunk boundary (and every
+        # shared-prefix handoff) starts exactly at a page start
+        self.chunk_tokens = (max(1, chunked_prefill // page_size) * page_size
+                             if chunked_prefill else 0)
         if n_pages is None:
             self.spec = default_page_spec(n_slots, max_len, page_size)
         else:
             self.spec = PageSpec(n_pages=n_pages, page_size=page_size,
                                  max_pages=-(-max_len // page_size))
-        self.pool = PagePool(self.spec, n_slots)
-        self.sched = Scheduler(n_slots, self.pool)
+        self.pool = PagePool(self.spec, n_slots,
+                             prefix_cache=self.prefix_share)
+        self.sched = Scheduler(n_slots, self.pool,
+                               prefix_share=self.prefix_share)
         self.cache = init_cache(cfg, n_slots, self.spec.max_len,
                                 paged=self.spec)
         self.cur_len = np.zeros(n_slots, np.int64)   # tokens in cache per slot
         self.last_tok = np.zeros(n_slots, np.int64)  # next token to feed
         self.active = np.zeros(n_slots, bool)
-        self._rng = np.random.default_rng(seed)
-        self._key = jax.random.PRNGKey(seed)
+        self._prefilling: dict[int, Request] = {}    # slot -> mid-prompt req
+        self._key, self._first_key = jax.random.split(jax.random.PRNGKey(seed))
         self._next_rid = 0
         self.n_decode_steps = 0
         self.n_prefills = 0
+        self.n_prefill_tokens = 0    # real prompt tokens actually prefilled
+        self.n_shared_tokens = 0     # prompt tokens served from the prefix cache
 
     # ------------------------------------------------------------- intake
     def submit(self, prompt: np.ndarray, *, max_new: int = 32,
@@ -279,30 +326,20 @@ class ContinuousEngine:
 
     # ------------------------------------------------------------ serving
     def step(self, now: float = 0.0) -> bool:
-        """One scheduler tick: admit + prefill new requests (batched by
-        prompt bucket), then run one fused block of decode steps over all
-        slots. Returns False when there was nothing to do."""
+        """One scheduler tick: admit new requests, advance every
+        mid-prefill slot by one chunk (batched by chunk bucket), then run
+        one fused block of decode steps over all decoding slots. Returns
+        False when there was nothing to do."""
         did = False
-        admits = self.sched.admit(now)
-        groups: dict[int, list] = {}
-        for slot, req in admits:
-            groups.setdefault(self._bucket(req.n_prompt), []).append(
-                (slot, req))
-        for padded, items in sorted(groups.items()):
+        for slot, req in self.sched.admit(now):
+            # a prefix hit starts the prefill past the shared pages — the
+            # cache already holds positions 0..n_shared-1 for this prompt
+            self.cur_len[slot] = req.n_shared
+            self.n_shared_tokens += req.n_shared
+            self._prefilling[slot] = req
+        if self._prefilling:
             did = True
-            i = 0
-            while i < len(items):
-                # pow2 chunk sizes bound the number of compiled shapes
-                size = min(1 << ((len(items) - i).bit_length() - 1),
-                           self.prefill_batch)
-                chunk = items[i:i + size]
-                i += size
-                logits = self._prefill(chunk, padded)
-                for row, (slot, req) in enumerate(chunk):
-                    tok = sample_np(logits[row], self._rng,
-                                    temperature=self.temperature,
-                                    top_k=self.top_k)
-                    self._emit(slot, req, tok, now)
+            self._prefill_tick(now)
         act = np.nonzero(self.active)[0]
         if act.size:
             did = True
@@ -344,28 +381,97 @@ class ContinuousEngine:
         b = self.prefill_bucket
         return -(-n // b) * b
 
-    def _prefill(self, chunk: Sequence[tuple[int, Request]],
-                 padded: int) -> np.ndarray:
-        """Prefill a same-bucket batch of admitted (slot, request) pairs.
-        Returns (B, V) last-token logits."""
-        batch = len(chunk)
+    def _read_width(self, n_tokens: int) -> int:
+        """Pow2 page count covering n_tokens, capped at the table width —
+        the read-width bucketing shared by decode and chunked prefill."""
+        need = self.spec.pages_for(n_tokens)
+        width = 1
+        while width < need:
+            width *= 2
+        return min(width, self.spec.max_pages)
+
+    def _prefill_tick(self, now: float) -> None:
+        """Advance every mid-prefill slot by one (page-aligned) chunk.
+
+        Chunks are batched per (length bucket, has-context) pair: rows
+        whose chunk starts at position 0 keep the original self-attending
+        prefill read path (bit-identical to the monolithic engine), while
+        suffix/later chunks need the gathered-context path because their
+        earlier tokens live in pages — their own prior chunks, or shared
+        prefix pages written by another request."""
+        work = []
+        for slot in sorted(self._prefilling):
+            req = self._prefilling[slot]
+            start = int(self.cur_len[slot])
+            end = req.n_prompt
+            if self.chunk_tokens and end - start > self.chunk_tokens:
+                end = start + self.chunk_tokens
+            work.append((slot, req, start, end))
+        groups: dict[tuple[int, bool], list] = {}
+        for item in work:
+            slot, req, start, end = item
+            groups.setdefault((self._bucket(end - start), start > 0),
+                              []).append(item)
+        for (padded, has_ctx), items in sorted(groups.items()):
+            i = 0
+            while i < len(items):
+                # pow2 chunk sizes bound the number of compiled shapes
+                size = min(1 << ((len(items) - i).bit_length() - 1),
+                           self.prefill_batch)
+                self._prefill_chunk(items[i:i + size], padded, has_ctx, now)
+                i += size
+
+    def _prefill_chunk(self, items: Sequence[tuple], padded: int,
+                       has_ctx: bool, now: float) -> None:
+        """Prefill one same-bucket batch of (slot, req, start, end) chunks;
+        rows that complete their prompt sample a first token and switch
+        the slot to decoding."""
+        batch = len(items)
         toks = np.zeros((batch, padded), np.int32)
         pos = np.full((batch, padded), -1, np.int32)
-        for row, (slot, req) in enumerate(chunk):
-            length = req.n_prompt
-            toks[row, padded - length:] = req.prompt
-            pos[row, padded - length:] = np.arange(length, dtype=np.int32)
-        slots = np.asarray([slot for slot, _ in chunk], np.int32)
-        paged = {"bt_rows": jnp.asarray(self.pool.tables[slots]),
-                 "slots": jnp.asarray(slots)}
+        for row, (slot, req, start, end) in enumerate(items):
+            n = end - start
+            toks[row, padded - n:] = req.prompt[start:end]
+            pos[row, padded - n:] = np.arange(start, end, dtype=np.int32)
+        slots = np.asarray([slot for slot, _, _, _ in items], np.int32)
+        if has_ctx:
+            # pow2-bucketed read width over the deepest chunk end, so the
+            # gathered context scales with fill, not provisioned max_len
+            kv_end = np.asarray([end for _, _, _, end in items], np.int32)
+            width = self._read_width(int(kv_end.max()))
+            paged = {"bt_rows": jnp.asarray(np.ascontiguousarray(
+                         self.pool.tables[slots][:, :width])),
+                     "slots": jnp.asarray(slots),
+                     "kv_len": jnp.asarray(kv_end)}
+        else:
+            paged = {"bt_rows": jnp.asarray(self.pool.tables[slots]),
+                     "slots": jnp.asarray(slots)}
         logits, self.cache = _paged_prefill_jit(
             self.cfg, self.params, jnp.asarray(toks), self.cache,
             jnp.asarray(pos), paged)
-        for slot, req in chunk:
-            self.cur_len[slot] = req.n_prompt
-            self.active[slot] = True
         self.n_prefills += 1
-        return np.asarray(logits)
+        self.n_prefill_tokens += sum(end - start for _, _, start, end in items)
+        finish = []
+        for row, (slot, req, start, end) in enumerate(items):
+            self.cur_len[slot] = end
+            if end >= req.n_prompt:
+                finish.append(row)
+        if not finish:
+            return
+        keys = jnp.stack([jax.random.fold_in(self._first_key, items[row][1].rid)
+                          for row in finish])
+        first = np.asarray(_sample_first_jit(
+            logits[jnp.asarray(finish)], keys,
+            temperature=self.temperature, top_k=self.top_k))
+        for tok, row in zip(first, finish):
+            slot, req, _, _ = items[row]
+            del self._prefilling[slot]
+            self.active[slot] = True
+            if self.prefix_share:
+                # publish this prompt's full pages before _emit can retire
+                # the slot (an immediate EOS/max_new=1 would unmap it)
+                self.pool.register_prefix(req.prompt, slot)
+            self._emit(slot, req, int(tok), now)
 
     def _decode_block(self) -> np.ndarray:
         """One fused block of decode steps; returns (K, n_slots) tokens.
@@ -375,19 +481,16 @@ class ContinuousEngine:
         boundary instead of idling through overshoot steps."""
         act = self.active.copy()
         self._key, sk = jax.random.split(self._key)
+        # min over *decoding* slots only: a mid-prefill request has its
+        # whole max_new outstanding and must not shrink everyone's block
         remaining = min(req.max_new - len(req.tokens)
-                        for req in self.sched.slots if req is not None)
+                        for slot, req in enumerate(self.sched.slots)
+                        if req is not None and act[slot])
         k_steps = min(self.decode_block,
                       1 << (max(remaining, 1).bit_length() - 1))
         # bucket the attention read width (pow2 pages over the deepest slot
         # at block end) so shallow traffic doesn't pay max_len-wide gathers
-        ps, maxp = self.spec.page_size, self.spec.max_pages
-        deepest = int(self.cur_len[act].max()) + k_steps
-        need = -(-deepest // ps)
-        width = 1
-        while width < need:
-            width *= 2
-        width = min(width, maxp)
+        width = self._read_width(int(self.cur_len[act].max()) + k_steps)
         toks, self.cache = _paged_decode_scan_jit(
             self.cfg, self.params, self.cache,
             jnp.asarray(self.last_tok.astype(np.int32)),

@@ -18,6 +18,17 @@ Page 0 is a reserved scratch page: idle slots (and padded prompt positions)
 write there, and nothing ever reads it. The allocator itself is host-side
 (`PagePool`); only the gather/scatter helpers below run under jit.
 
+Pages are refcounted so slots can share them: with `prefix_cache=True` the
+pool keeps a token-keyed index over *full* pages (prefix length rounded
+down to a page boundary), and a new request whose prompt hits the index is
+stitched onto the cached pages instead of re-prefilling them. Because only
+whole pages of pure prompt tokens are ever shared, a shared page holds
+exactly positions ``0..p-1`` and no copy-on-write is needed — decode
+writes always land on pages the slot owns exclusively (its tail pages).
+The index itself holds one reference per cached page, so a cached page
+survives its last slot retiring; index-only pages (refcount 1) are the
+eviction pool when fresh allocations outrun the free list.
+
 Layering note: repro.models.{attention,mla,blocks} import this module, so
 it must stay dependency-free — importing anything from repro.models (or
 repro.serve.engine) here would create a package cycle.
@@ -25,6 +36,9 @@ repro.serve.engine) here would create a package cycle.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -57,44 +71,246 @@ def default_page_spec(n_slots: int, max_len: int,
 
 
 class PagePool:
-    """Host-side page allocator and per-slot block tables.
+    """Host-side refcounted page allocator and per-slot block tables.
 
-    Pages are owned by exactly one slot from admission to retirement, so
-    device-side scatters never collide (idle slots all target the scratch
-    page, whose contents are never read).
+    A page's writers never collide: decode only ever writes to a slot's
+    *tail* pages, which have refcount 1 from that slot alone (idle slots
+    all target the scratch page, whose contents are never read). Shared
+    prefix pages may be read by many slots at once, but hold frozen prompt
+    tokens, so reads need no coordination.
     """
 
-    def __init__(self, spec: PageSpec, n_slots: int):
+    def __init__(self, spec: PageSpec, n_slots: int,
+                 prefix_cache: bool = False):
         self.spec = spec
         self.n_slots = n_slots
+        self.prefix_cache = prefix_cache
         self._free = list(range(spec.n_pages - 1, SCRATCH_PAGE, -1))
         self.tables = np.full((n_slots, spec.max_pages), -1, np.int32)
+        self.refcount = np.zeros(spec.n_pages, np.int32)
+        # prefix key -> page id, insertion-ordered so eviction pops the
+        # oldest entry (hits re-insert: approximate LRU). Keys are chained
+        # digests key_k = H(key_{k-1} || page_k token bytes): each page key
+        # commits to the *whole* prefix up to its end — two prompts share a
+        # page only when every earlier token matches — at O(L) total
+        # keying cost instead of O(L^2) byte-prefix keys. Parent links and
+        # per-key cached-child counts make chain-leaf detection O(1)
+        # during eviction.
+        self._prefix_index: OrderedDict[bytes, int] = OrderedDict()
+        self._parent: dict[bytes, Optional[bytes]] = {}
+        # key -> number of live entries whose parent link is `key` (the
+        # key itself need not be live: strands keep their parent link)
+        self._children: dict[bytes, int] = {}
+        # bumped on every index mutation; lets admission cache a blocked
+        # queue head's prefix lookup across ticks
+        self.generation = 0
 
     @property
     def n_free(self) -> int:
         return len(self._free)
 
-    def can_alloc(self, n_tokens: int) -> bool:
-        return self.spec.pages_for(n_tokens) <= len(self._free)
+    @property
+    def n_cached(self) -> int:
+        """Pages held by the prefix index (possibly also held by slots)."""
+        return len(self._prefix_index)
 
-    def alloc(self, slot: int, n_tokens: int) -> None:
-        """Give `slot` enough pages for n_tokens. Caller checks can_alloc."""
+    def _n_evictable(self, exclude=()) -> int:
+        ex = set(exclude)
+        return sum(1 for p in self._prefix_index.values()
+                   if self.refcount[p] == 1 and p not in ex)
+
+    def can_alloc(self, n_tokens: int, shared_pages=()) -> bool:
+        """True when a request of `n_tokens` could be admitted now.
+
+        Gates on the block-table width too: a request needing more pages
+        than one table row can hold is structurally impossible, and must
+        report un-admittable here rather than blowing up inside `alloc`
+        after the caller has already committed a slot. `shared_pages` are
+        prefix-cache pages the caller will reuse: they reduce the fresh-
+        page need but must not be counted as evictable headroom."""
         need = self.spec.pages_for(n_tokens)
-        if need > len(self._free):
-            raise RuntimeError(f"page pool exhausted: need {need}, "
-                               f"free {len(self._free)}")
+        if need > self.spec.max_pages:
+            return False
+        need -= len(shared_pages)
+        return need <= len(self._free) + self._n_evictable(shared_pages)
+
+    def _prefix_keys(self, tokens: np.ndarray, n_pages: int) -> list[bytes]:
+        """Chained page keys for the first n_pages full pages of `tokens`."""
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        ps = self.spec.page_size
+        keys, prev = [], b""
+        for k in range(n_pages):
+            h = hashlib.blake2b(prev, digest_size=16)
+            h.update(toks[k * ps:(k + 1) * ps].tobytes())
+            prev = h.digest()
+            keys.append(prev)
+        return keys
+
+    def lookup_prefix(self, tokens: np.ndarray) -> list[int]:
+        """Longest indexed run of full pages covering a *strict* prefix.
+
+        Capped at len(tokens) - 1 so the suffix prefill always has at least
+        one token left to produce the last-token logits from."""
+        if not self.prefix_cache:
+            return []
+        n_full = (len(tokens) - 1) // self.spec.page_size
+        pages = []
+        for key in self._prefix_keys(tokens, n_full):
+            page = self._prefix_index.get(key)
+            if page is None:
+                break
+            self._prefix_index.move_to_end(key)     # refresh LRU position
+            pages.append(page)
+        return pages
+
+    def register_prefix(self, tokens: np.ndarray, slot: int) -> int:
+        """Publish `slot`'s full-page prompt prefixes into the index.
+
+        Called once the prompt is fully prefilled. Only pages holding pure
+        prompt tokens are registered (the page at ``len // page_size`` —
+        partial, or about to receive decode tokens — never is). Idempotent
+        on already-indexed keys; returns the number of pages added."""
+        if not self.prefix_cache:
+            return 0
+        n_full = len(tokens) // self.spec.page_size
+        added = 0
+        parent = None
+        for k, key in enumerate(self._prefix_keys(tokens, n_full)):
+            if key in self._prefix_index:
+                self._prefix_index.move_to_end(key)
+                parent = key
+                continue
+            page = int(self.tables[slot, k])
+            assert page >= 0, f"slot {slot} prefix page {k} not mapped"
+            self._prefix_index[key] = page
+            self._parent[key] = parent
+            if parent is not None:
+                self._children[parent] = self._children.get(parent, 0) + 1
+            self.refcount[page] += 1                # the index holds a ref
+            self.generation += 1
+            added += 1
+            parent = key
+        return added
+
+    def _drop_entry(self, key: bytes) -> None:
+        """Remove one index entry, dropping the index's page reference.
+
+        `self._children[key]` is deliberately kept: it counts live entries
+        whose parent link targets `key`, and those children stay cached
+        (as strands) when `key` itself is dropped — if the same prefix is
+        re-registered later, the surviving count keeps leaf detection
+        exact. The count dies naturally when its last child drops."""
+        page = self._prefix_index.pop(key)
+        parent = self._parent.pop(key)
+        if parent is not None:
+            self._children[parent] -= 1
+            if not self._children[parent]:
+                del self._children[parent]
+        self.generation += 1
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            self._free.append(int(page))
+
+    def _evict_one(self) -> None:
+        """Drop one index-only (refcount 1) cached page to the free list.
+        Caller guarantees one exists (via can_alloc).
+
+        Prefers the oldest entry with no cached descendant (a chain leaf):
+        evicting a chain's head first would strand its deeper entries —
+        unreachable via lookup (which walks from page 0) yet still holding
+        pages. Falls back to the plain oldest evictable entry when every
+        candidate has a descendant pinned by a live slot, so the
+        can_alloc/_n_evictable accounting always stays honest."""
+        fallback = None
+        for key, page in self._prefix_index.items():
+            if self.refcount[page] != 1:
+                continue
+            if fallback is None:
+                fallback = key
+            if not self._children.get(key):
+                fallback = key
+                break
+        if fallback is None:
+            raise RuntimeError("no evictable prefix-cache page")
+        self._drop_entry(fallback)
+
+    def clear_prefix_cache(self) -> int:
+        """Drop every prefix-index entry (pages still held by live slots
+        keep their slot references and just leave the index). Returns the
+        number of entries dropped — drivers use this to separate warm-up
+        registrations from measured traffic."""
+        n = len(self._prefix_index)
+        while self._prefix_index:
+            self._drop_entry(next(iter(self._prefix_index)))
+        return n
+
+    def alloc(self, slot: int, n_tokens: int, shared_pages=()) -> None:
+        """Map `slot` to pages for n_tokens: `shared_pages` (prefix-cache
+        hits, referenced not copied) stitched in front of freshly allocated
+        tail pages. Caller checks can_alloc with the same shared list."""
+        need = self.spec.pages_for(n_tokens)
         if need > self.spec.max_pages:
             raise ValueError(f"request needs {need} pages > block-table "
                              f"width {self.spec.max_pages}")
+        shared = [int(p) for p in shared_pages]
+        fresh = need - len(shared)
+        if fresh > len(self._free) + self._n_evictable(shared):
+            raise RuntimeError(f"page pool exhausted: need {fresh} fresh, "
+                               f"free {len(self._free)}")
         assert np.all(self.tables[slot] == -1), f"slot {slot} already mapped"
-        pages = [self._free.pop() for _ in range(need)]
-        self.tables[slot, :need] = pages
+        # take the shared references first so eviction below can never
+        # reclaim the very pages this request is reusing
+        for p in shared:
+            self.refcount[p] += 1
+        pages = []
+        for _ in range(fresh):
+            if not self._free:
+                self._evict_one()
+            page = self._free.pop()
+            self.refcount[page] += 1
+            pages.append(page)
+        self.tables[slot, :need] = shared + pages
 
     def release(self, slot: int) -> None:
-        """Return all of `slot`'s pages to the free list."""
-        held = self.tables[slot]
-        self._free.extend(int(p) for p in held if p >= 0)
+        """Drop `slot`'s references; pages free when nobody holds them.
+
+        Shared prefix pages stay alive while other slots or the prefix
+        index still reference them."""
+        for p in self.tables[slot]:
+            if p < 0:
+                continue
+            self.refcount[p] -= 1
+            assert self.refcount[p] >= 0, f"page {int(p)} over-released"
+            if self.refcount[p] == 0:
+                self._free.append(int(p))
         self.tables[slot] = -1
+
+    def check_invariants(self) -> None:
+        """Assert the refcount/free-list/index bookkeeping is consistent:
+        every page's refcount equals its holder count, the free list is
+        disjoint from held/cached pages, and no page is lost or duplicated
+        (conservation: free + referenced = n_pages - 1)."""
+        held = self.tables[self.tables >= 0].astype(np.int64)
+        counts = np.bincount(held, minlength=self.spec.n_pages)
+        for page in self._prefix_index.values():
+            counts[page] += 1
+        assert np.all(self.refcount >= 0), "negative refcount"
+        assert np.array_equal(self.refcount, counts), \
+            "refcounts out of sync with holders"
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate free-list entries"
+        referenced = {int(p) for p in np.nonzero(counts)[0]}
+        assert not (free & referenced), "page both free and referenced"
+        assert SCRATCH_PAGE not in free and SCRATCH_PAGE not in referenced
+        assert len(free) + len(referenced) == self.spec.n_pages - 1, \
+            "pages lost or duplicated"
+        assert set(self._parent) == set(self._prefix_index), \
+            "parent links out of sync with index entries"
+        children: dict = {}
+        for par in self._parent.values():
+            if par is not None:
+                children[par] = children.get(par, 0) + 1
+        assert children == self._children, "cached-child counts out of sync"
 
 
 # ------------------------------------------------------------- jit helpers

@@ -10,8 +10,9 @@ def sample_np(logits: np.ndarray, rng: np.random.Generator, *,
               temperature: float = 0.0, top_k: int = 0) -> int:
     """Host-side sampling of a single (V,) logits row.
 
-    The continuous engine samples per slot on the host between decode
-    dispatches; numpy keeps this off the device critical path.
+    Kept for host-side callers/tools; the continuous engine now samples
+    first tokens on-device from per-request keys (fold_in by rid) so
+    seeded runs don't depend on prefill batch grouping.
     """
     if temperature <= 0.0:
         return int(np.argmax(logits))

@@ -5,13 +5,23 @@ which queued request enters which slot. Admission is FIFO with head-of-line
 blocking: a request is admitted only when a slot is free AND the page pool
 can cover its whole budget (prompt + max_new tokens), so a running request
 can never hit pool exhaustion mid-decode. Pages return to the pool the
-moment a request retires.
+moment a request retires. A request whose budget exceeds the block-table
+width is *structurally* un-admittable — it is rejected at the queue head
+(``rejected=True``) rather than blocking the queue forever or raising
+mid-admit.
+
+With ``prefix_share=True`` admission consults the pool's prefix index:
+pages covering the prompt's cached full-page prefix are stitched into the
+slot's block table by reference, the request is admitted against only its
+non-shared page budget, and ``req.n_shared`` tells the engine how many
+prompt tokens are already in cache (its prefill starts there).
 
 This module is model-free — the execution core (jitted prefill/decode over
 the paged cache) lives in serve/engine.py.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 from collections import deque
 from typing import Optional
@@ -33,6 +43,8 @@ class Request:
     tokens: list = dataclasses.field(default_factory=list)
     slot: int = -1
     done: bool = False
+    rejected: bool = False          # structurally un-admittable (too wide)
+    n_shared: int = 0               # prompt tokens served from the prefix cache
     admitted_at: Optional[float] = None
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
@@ -50,36 +62,71 @@ class Request:
 class Scheduler:
     """Admission queue over a fixed slot pool backed by a PagePool."""
 
-    def __init__(self, n_slots: int, pool: PagePool):
+    def __init__(self, n_slots: int, pool: PagePool,
+                 prefix_share: bool = False):
         self.n_slots = n_slots
         self.pool = pool
-        self._pending: list[Request] = []     # submitted, arrival in future
+        self.prefix_share = prefix_share
+        self._pending: list[Request] = []     # submitted, sorted by arrival
         self.queue: deque[Request] = deque()  # arrived, waiting for a slot
         self.slots: list[Optional[Request]] = [None] * n_slots
         self._retired: list[Request] = []
+        # (rid, pool generation) -> shared pages of the blocked queue head,
+        # so a head-of-line-blocked request doesn't re-hash its whole
+        # prompt on every tick it spends waiting for pages
+        self._hol_lookup: Optional[tuple[tuple[int, int], list[int]]] = None
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
-        self._pending.append(req)
-        self._pending.sort(key=lambda r: r.arrival)
+        # insort (not re-sort): O(log n) to find the spot instead of an
+        # O(n log n) full sort per call; ties keep submission order
+        bisect.insort(self._pending, req, key=lambda r: r.arrival)
 
     def _ingest(self, now: float) -> None:
-        while self._pending and self._pending[0].arrival <= now:
-            self.queue.append(self._pending.pop(0))
+        i = bisect.bisect_right(self._pending, now,
+                                key=lambda r: r.arrival)
+        if i:
+            self.queue.extend(self._pending[:i])
+            del self._pending[:i]
 
     # ---------------------------------------------------------- admission
     def admit(self, now: float = 0.0) -> list[tuple[int, Request]]:
-        """Admit FIFO requests into free slots while pages last."""
+        """Admit FIFO requests into free slots while pages last.
+
+        Never raises for a submitted request: a budget wider than one
+        block-table row can never be satisfied, so such a request is
+        retired as ``rejected`` (instead of blocking the queue head
+        forever or letting ``alloc`` raise mid-admit) and admission moves
+        on to the next request."""
         self._ingest(now)
         out = []
         free = [s for s, r in enumerate(self.slots) if r is None]
         while self.queue and free:
             req = self.queue[0]
-            if not self.pool.can_alloc(req.budget):
+            if (self.pool.spec.pages_for(req.budget)
+                    > self.pool.spec.max_pages):
+                self.queue.popleft()          # structurally impossible
+                req.rejected = True
+                req.done = True
+                req.finished_at = now
+                self._retired.append(req)
+                continue
+            shared: list[int] = []
+            if self.prefix_share:
+                state = (req.rid, self.pool.generation)
+                if self._hol_lookup and self._hol_lookup[0] == state:
+                    shared = self._hol_lookup[1]
+                else:
+                    # safe to cache across blocked ticks: eviction only
+                    # runs inside alloc, and new entries bump generation
+                    shared = self.pool.lookup_prefix(req.prompt)
+                    self._hol_lookup = (state, shared)
+            if not self.pool.can_alloc(req.budget, shared_pages=shared):
                 break                         # head-of-line blocks on pages
             self.queue.popleft()
             slot = free.pop(0)
-            self.pool.alloc(slot, req.budget)
+            self.pool.alloc(slot, req.budget, shared_pages=shared)
+            req.n_shared = len(shared) * self.pool.spec.page_size
             self.slots[slot] = req
             req.slot = slot
             req.admitted_at = now
