@@ -1,6 +1,13 @@
 """Deployment transform: convert a float param tree to packed low-bit
 weights (RTN path — the NT pipeline produces its own QuantizedTensors).
-Shape-deterministic, so it composes with jax.eval_shape for the dry-run."""
+Shape-deterministic, so it composes with jax.eval_shape for the dry-run.
+
+With a mesh, packing is followed by the tensor-parallel placement step:
+every leaf — packed qw/scale pairs included — is device_put onto the
+serving mesh per `distributed.partitioning.serve_param_shardings`, so
+deployed low-bit weights land sharded over the model axis instead of
+replicated on every device (the whole point of low-bit serving at scale).
+"""
 from __future__ import annotations
 
 import jax
@@ -15,15 +22,16 @@ _SKIP = ("embed", "lm_head", "pos", "router", "conv")
 
 def quantize_params_for_serving(cfg: ModelConfig, params: dict,
                                 bits: int = 0, group_size: int = 0,
-                                act_bits: int = 0) -> dict:
+                                act_bits: int = 0, mesh=None) -> dict:
     """Pack every quantizable linear — stacked (E, K, N) expert weights
     included — for the serving fast paths. `act_bits=8` additionally tags
     each packed tensor for the true int8-activation (W8A8/W4A8) matmul
-    path in models/linear.py."""
+    path in models/linear.py. `mesh` (tensor-parallel serving) places the
+    packed tree per the serving TP contract after packing."""
     bits = bits or cfg.serve_quant_bits
     group_size = group_size or cfg.serve_quant_group
     if not bits:
-        return params
+        return place_params_for_serving(cfg, params, mesh)
     # max_ndim=4: scan-stacked MoE expert weights are (L, E, K, N) — they
     # pack to a stacked (L, E, K/vpb, N) layout consumed per-layer by the
     # expert-batched kernel (previously they silently stayed float)
@@ -38,4 +46,16 @@ def quantize_params_for_serving(cfg: ModelConfig, params: dict,
         new_lin = dict(lin)
         new_lin["w"] = quantize_stacked(w, bits, gs, act_bits=act_bits)
         params = tree_set(params, path, new_lin)
-    return params
+    return place_params_for_serving(cfg, params, mesh)
+
+
+def place_params_for_serving(cfg: ModelConfig, params: dict, mesh) -> dict:
+    """Mesh-aware placement: device_put every leaf (packed or float) with
+    its serving-TP NamedSharding. No-op when `mesh` is None, so the
+    single-device path never touches placement."""
+    if mesh is None:
+        return params
+    from repro.distributed.partitioning import serve_param_shardings
+
+    shardings = serve_param_shardings(mesh, cfg, params)
+    return jax.tree.map(jax.device_put, params, shardings)

@@ -188,28 +188,73 @@ def fake_quant(w: jax.Array, bits: int, group_size: int = -1,
     return (q.astype(w.dtype) * scale[:, None, :].astype(w.dtype)).reshape(k, n)
 
 
-def quantize_activation(x: jax.Array, bits: int = 8):
+def quantize_activation(x: jax.Array, bits: int = 8,
+                        axis_name: str | None = None):
     """Dynamic symmetric per-token int8 activation quantization.
 
     Returns (q, scale): q int8 with shape of x, scale f32 (..., 1) such that
     q * scale ~= x with |error| <= scale / 2 elementwise (the amax of every
     row lands exactly on the grid, so clipping never adds error).
+
+    `axis_name`: a shard_map/pmap axis over which the token's feature dim is
+    split (tensor-parallel row-parallel linears). The amax is then pmax'ed
+    so every shard quantizes its slice on the *same* per-token grid as a
+    single device would — a shard-local amax would change the quantization
+    itself, not just summation order, and break TP-vs-single-device token
+    identity.
     """
     qmax = qmax_for_bits(bits)
     xf = x.astype(jnp.float32)
     amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    if axis_name is not None:
+        amax = jax.lax.pmax(amax, axis_name)
     scale = jnp.maximum(amax, 1e-10) / qmax
     q = jnp.clip(jnp.round(xf / scale), -qmax, qmax).astype(jnp.int8)
     return q, scale
 
 
-def fake_quant_activation(x: jax.Array, bits: int = 8) -> jax.Array:
-    """Dynamic symmetric per-tensor activation fake-quant (SmoothQuant A8)."""
+def fake_quant_activation(x: jax.Array, bits: int = 8,
+                          axis_name: str | None = None) -> jax.Array:
+    """Dynamic symmetric per-tensor activation fake-quant (SmoothQuant A8).
+
+    `axis_name`: shard axis the feature dim is split over (TP row-parallel)
+    — the per-tensor amax is pmax'ed so every shard fake-quants on the
+    single-device grid (same contract as `quantize_activation`)."""
     qmax = qmax_for_bits(bits)
-    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-10) / qmax
+    amax = jnp.max(jnp.abs(x))
+    if axis_name is not None:
+        amax = jax.lax.pmax(amax, axis_name)
+    scale = jnp.maximum(amax, 1e-10) / qmax
     q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
     return (q * scale).astype(x.dtype)
 
 
 def quantized_like(qt: QuantizedTensor) -> bool:
     return isinstance(qt, QuantizedTensor)
+
+
+def localize_quantized(params):
+    """Rewrite every QuantizedTensor's static `shape` to match its (possibly
+    shard-local) qw/scale arrays.
+
+    Inside a tensor-parallel shard_map the pytree *children* (qw, scale) are
+    the per-shard slices but the static aux still carries the global (K, N)
+    — every consumer that derives dims from `qt.shape` (dequantize, kernel
+    dispatch, reference matmuls) would then unpack garbage. The local K is
+    recovered from the packed rows; `min` with the recorded K keeps
+    unsharded leaves exact when packing padded K up to a whole byte.
+    `group_size` is untouched: K sharding is only ever legal on whole-group
+    boundaries (distributed/partitioning.py `_qt_serve_spec`)."""
+
+    def fix(t):
+        if not isinstance(t, QuantizedTensor):
+            return t
+        k = min(t.shape[-2], t.qw.shape[-2] * values_per_byte(t.bits))
+        n = t.qw.shape[-1]
+        if (k, n) == t.shape[-2:] and t.qw.shape[:-2] == t.shape[:-2]:
+            return t
+        return QuantizedTensor(t.qw, t.scale, t.bits, t.group_size,
+                               t.qw.shape[:-2] + (k, n), t.act_bits)
+
+    return jax.tree.map(fix, params,
+                        is_leaf=lambda x: isinstance(x, QuantizedTensor))

@@ -13,8 +13,8 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
-from repro.core.quant.types import QuantizedTensor
-from repro.distributed.sharding import DEFAULT_RULES, spec_for
+from repro.core.quant.types import QuantizedTensor, values_per_byte
+from repro.distributed.sharding import DEFAULT_RULES, _axis_size, spec_for
 from repro.models.config import ModelConfig
 
 # (path regex, logical names per trailing dim). First match wins. Names are
@@ -102,12 +102,17 @@ def logical_axes_for(path: str, ndim: int) -> tuple:
 def _walk(tree, prefix, fn):
     if isinstance(tree, QuantizedTensor):
         # reached via the linear's "w" key, so `prefix` already ends in /w.
-        # qw (..., Kp, N) shares the weight's names; scale (..., G, N) keeps
-        # only the output-dim sharding
+        # qw (..., Kp, N) shares the weight's names; scale (..., G, N)
+        # inherits the output-dim sharding always, and the K-dim sharding on
+        # its group dim whenever there is more than one scale group (each
+        # shard of a K-sharded grouped weight needs exactly its own groups;
+        # a per-channel (1, N) scale stays whole on every K shard)
         wnames = logical_axes_for(prefix, len(tree.shape))
         pad = tree.qw.ndim - len(wnames)
         qw_names = (None,) * pad + wnames if pad >= 0 else wnames[-tree.qw.ndim:]
-        sc_names = qw_names[:-2] + (None, qw_names[-1])
+        gdim = tree.scale.shape[-2] if hasattr(tree.scale, "shape") else 1
+        sc_names = qw_names[:-2] + ((qw_names[-2] if gdim > 1 else None),
+                                    qw_names[-1])
         return QuantizedTensor(fn(prefix + "#qw", tree.qw, qw_names),
                                fn(prefix + "#scale", tree.scale, sc_names),
                                tree.bits, tree.group_size, tree.shape,
@@ -150,6 +155,122 @@ def shard_struct(mesh, cfg: ModelConfig, params_shape) -> dict:
                                     sharding=NamedSharding(mesh, spec))
 
     return _walk(params_shape, "", fn)
+
+
+# --------------------------------------------------- tensor-parallel serving
+#
+# Placement contract for the continuous engine's shard_map TP (axis
+# TP_AXIS = "model"; see DESIGN.md "Tensor-parallel serving"):
+#
+#   column-parallel (output dim on "model"):  attn wq/wk/wv (+ their biases),
+#       mlp wi/wg (+ biases), mla wq/wukv
+#   row-parallel (input dim on "model", psum after the matmul, bias added
+#       post-psum):  attn wo, mlp wo, mla wo
+#   replicated:  embed, lm_head, pos, norms, mla wdkv/kvnorm, all output
+#       biases — logits are therefore identical on every shard and sampling
+#       needs no vocab collective
+#   paged KV pools shard along their kv-head dim (serve/kvcache.py)
+#
+# QuantizedTensor leaves shard qw and scale *jointly*: a K-dim (row-
+# parallel) sharding is legal only when the packed rows split evenly AND
+# the scale groups split with them (per-channel scales stay replicated —
+# every K shard needs the whole (1, N) row). When the joint constraint
+# fails the K sharding is dropped from both, never from only one.
+
+def serve_tp_rules(cfg: ModelConfig) -> dict:
+    """Logical->mesh rules for TP serving on a 1-D ("model",) mesh.
+
+    No FSDP/data axes (a serving weight is either TP-sharded or
+    replicated), embed/lm_head/pos replicated (identical logits per shard),
+    and the MoE / Mamba axes neutralized — EP-sharded MoE serving and SSM
+    serving TP are open items (ROADMAP)."""
+    rules = dict(DEFAULT_RULES)
+    rules.update(PARAM_RULES_EXTRA)
+    rules["embed_fsdp"] = None
+    rules["vocab"] = None
+    rules["pos"] = None
+    rules["expert"] = None
+    rules["expert_ff"] = None
+    rules["mamba_inner"] = None
+    rules["ssm_heads"] = None
+    return rules
+
+
+def _qt_serve_spec(qt: QuantizedTensor, wnames: tuple, mesh, rules):
+    """Joint (qw, scale) PartitionSpecs for one quantized leaf."""
+    full = spec_for(qt.shape, wnames, mesh=mesh, rules=rules)
+    k_ax, n_ax = full[-2], full[-1]
+    n_groups = qt.scale.shape[-2]
+    if k_ax is not None and mesh is not None:
+        tp = _axis_size(mesh, k_ax)
+        vpb = values_per_byte(qt.bits)
+        packed_ok = (qt.qw.shape[-2] % tp == 0
+                     and qt.shape[-2] % (tp * vpb) == 0)
+        groups_ok = n_groups == 1 or n_groups % tp == 0
+        if not (packed_ok and groups_ok):
+            k_ax = None                      # drop jointly, keep consistency
+    lead = (None,) * (qt.qw.ndim - 2)
+    qw_spec = PartitionSpec(*lead, k_ax, n_ax)
+    sc_spec = PartitionSpec(*lead, k_ax if n_groups > 1 else None, n_ax)
+    return qw_spec, sc_spec
+
+
+def serve_param_shardings(mesh, cfg: ModelConfig, params,
+                          specs_only: bool = False):
+    """NamedSharding (or bare PartitionSpec) tree for TP serving placement.
+
+    With `specs_only` (used for shard_map specs) `mesh` may still be given
+    so divisibility checks run against the real axis size; a None mesh
+    resolves names optimistically (spec_for keeps every named axis)."""
+    rules = serve_tp_rules(cfg)
+
+    def wrap(spec):
+        if specs_only or mesh is None:
+            return spec
+        return NamedSharding(mesh, spec)
+
+    def walk(tree, prefix):
+        if isinstance(tree, QuantizedTensor):
+            wnames = logical_axes_for(prefix, len(tree.shape))
+            qw_spec, sc_spec = _qt_serve_spec(tree, wnames, mesh, rules)
+            return QuantizedTensor(wrap(qw_spec), wrap(sc_spec), tree.bits,
+                                   tree.group_size, tree.shape, tree.act_bits)
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}" if prefix else k)
+                    for k, v in tree.items()}
+        names = logical_axes_for(prefix, getattr(tree, "ndim", 0))
+        return wrap(spec_for(tree.shape, names, mesh=mesh, rules=rules))
+
+    return walk(params, "")
+
+
+def tp_local_cfg(cfg: ModelConfig) -> ModelConfig:
+    """Per-shard view of a TP-serving config (passed to the model code
+    inside the engine's shard_map): head counts divided by tp with head_dim
+    pinned first, so `cfg.hd` does not silently change when it was derived
+    from d_model / n_heads. `tp` stays > 1 — that is how row-parallel
+    linears know to psum over TP_AXIS."""
+    if cfg.tp <= 1:
+        return cfg
+    assert cfg.n_heads % cfg.tp == 0, (cfg.n_heads, cfg.tp)
+    return cfg.replace(head_dim=cfg.hd,
+                       n_heads=cfg.n_heads // cfg.tp,
+                       n_kv_heads=max(1, cfg.n_kv_heads // cfg.tp))
+
+
+def serve_tp_widths(cfg: ModelConfig) -> list[int]:
+    """Legal TP widths for a config: GQA head-group alignment — every shard
+    must hold whole kv heads with all their grouped query heads — plus an
+    evenly split MLP hidden dim. (MLA has per-token latent KV, so only the
+    query/output heads constrain it.)"""
+    def ok(tp):
+        if cfg.n_heads % tp or cfg.d_ff % tp:
+            return False
+        if cfg.attention != "mla" and cfg.n_kv_heads % tp:
+            return False
+        return True
+
+    return [tp for tp in range(1, cfg.n_heads + 1) if ok(tp)]
 
 
 def batch_shardings(mesh, tree, names_map: dict) -> dict:

@@ -17,6 +17,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 Axes = Union[None, str, tuple[str, ...]]
 
+# Mesh axis carrying tensor parallelism for serving: heads / kv-heads / mlp
+# hidden / paged KV pools shard over it, row-parallel linears psum over it
+# (inside the engine's shard_map; see distributed/partitioning.py
+# `serve_param_shardings` for the full placement contract).
+TP_AXIS = "model"
+
 # Default logical->physical rules for the (pod, data, model) production mesh.
 DEFAULT_RULES: dict[str, Axes] = {
     "batch": ("pod", "data"),

@@ -146,12 +146,15 @@ def expert_dequant_matmul(x: jax.Array, qt: QuantizedTensor, *,
 
 
 def w8a8_matmul(x: jax.Array, qt: QuantizedTensor, *, out_dtype=None,
-                bm: int = 128, bn: int = 256, bk: int = 256) -> jax.Array:
+                bm: int = 128, bn: int = 256, bk: int = 256,
+                amax_axis: str | None = None) -> jax.Array:
     """True A8 path: per-token int8 activation quantize, int8 x int8 -> int32
-    MXU matmul, per-(token, channel-group) rescale. x: (M, K) -> (M, N)."""
+    MXU matmul, per-(token, channel-group) rescale. x: (M, K) -> (M, N).
+    `amax_axis`: shard axis the K dim is split over (TP row-parallel) — the
+    activation amax is pmax'ed so every shard uses the single-device grid."""
     out_dtype = out_dtype or x.dtype
     m, k = x.shape
-    xq, xs = quantize_activation(x, 8)                 # int8, (M, 1) f32
+    xq, xs = quantize_activation(x, 8, axis_name=amax_axis)  # int8, (M,1) f32
     plan = _plan_tiles(m, k, qt.n, qt, bm, bn, bk)
     if plan is None:
         y = ref.w8a8_matmul_ref(xq, qt.qw, qt.scale, bits=qt.bits,
@@ -183,7 +186,15 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     pools. Returns (S, H, hd_v) without materializing the gathered
     (S, maxp*page_size, ...) KV view. CPU default runs the jnp page-walk
     reference (same math); REPRO_DEQUANT_IMPL=pallas lowers the kernel in
-    interpret mode; TPU compiles it."""
+    interpret mode; TPU compiles it.
+
+    Under tensor-parallel serving this op is invoked *per shard* inside the
+    engine's shard_map: the pools arrive with the shard-local kv-head slice
+    (KVH/tp) while block tables and fill counts are replicated scalars
+    (scalar-prefetch inputs are never sharded), so the grid simply shrinks
+    along its KVH axis — attention is head-independent and the kernel needs
+    no TP awareness. H here is the shard-local head count; the GQA group
+    width H/KVH is TP-invariant because legal widths divide n_kv_heads."""
     s, h, hd = q.shape
     kvh = k_pool.shape[2]
     qg = q.reshape(s, kvh, h // kvh, hd)

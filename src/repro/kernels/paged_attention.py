@@ -22,6 +22,12 @@ index maps can chase page indices before each tile's DMA is issued.
 Numerics mirror ``kernels/ref.paged_attention_ref`` op-for-op (same walk
 order, same f32 accumulation) so interpret-mode runs are bit-comparable
 with the jnp reference on CPU.
+
+Tensor parallelism (serve/engine.py shard_map): the kernel runs per shard
+on the local kv-head slice of the pools — the grid's KVH axis shrinks to
+KVH/tp while the scalar-prefetched block table / fill counts stay
+replicated, and per-head online softmax needs no cross-shard collective
+(the psum lives at the attention output projection, outside the kernel).
 """
 from __future__ import annotations
 

@@ -80,7 +80,16 @@ def run_continuous(cfg, params, work, args):
                            prefill_bucket=args.prefill_bucket,
                            paged_attn=args.paged_attn,
                            prefix_share=args.prefix_share,
-                           chunked_prefill=args.chunked_prefill)
+                           chunked_prefill=args.chunked_prefill,
+                           tp=args.tp)
+    if args.tp > 1:
+        rep = eng.tp_placement_report()
+        print(f"tensor-parallel x{args.tp}: params "
+              f"{rep['params']['per_device_bytes'] / 1e6:.1f} MB/device "
+              f"(global {rep['params']['global_bytes'] / 1e6:.1f} MB), "
+              f"KV pools {rep['kv']['per_device_bytes'] / 1e6:.1f} MB/device")
+        assert not rep["replicated_quant_leaves"], \
+            rep["replicated_quant_leaves"]
     # warm the jit caches — every prefill bucket in the workload, decoded
     # both shallow and to full depth so the common (k, width) decode-scan
     # shapes compile before timing (odd depth/remaining combos in the real
@@ -169,6 +178,11 @@ def main():
     ap.add_argument("--rate", type=float, default=8.0,
                     help="Poisson arrival rate, req/s (0 = all at t=0)")
     ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel width for the continuous engine "
+                         "(shards heads/mlp/KV pools over a 'model' mesh; "
+                         "on CPU force devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--paged-attn", default=None,
                     choices=["fused", "gather"],
@@ -195,9 +209,21 @@ def main():
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.enc_dec:
         raise SystemExit("whisper serving demo lives in tests/test_system.py")
+    if args.tp > 1 and args.engine != "continuous":
+        # the static baseline has no TP path — refusing beats silently
+        # timing a differently-configured engine in a "comparison"
+        raise SystemExit("--tp applies to the continuous engine only "
+                         "(use --engine continuous)")
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev, 1), ("data", "model")) if n_dev > 1 else None
-    rules = rules_for_config(cfg, mesh) if mesh else None
+    # with --tp the continuous engine owns placement (it builds a 1-D
+    # ("model",) mesh and device_puts weights + KV pools itself), so the
+    # GSPMD data-parallel ctx below stays out of its way
+    if args.tp > 1:
+        mesh, rules = None, None
+    else:
+        mesh = (jax.make_mesh((n_dev, 1), ("data", "model"))
+                if n_dev > 1 else None)
+        rules = rules_for_config(cfg, mesh) if mesh else None
 
     with sharding_ctx(mesh, rules):
         params = build_params(cfg, args)

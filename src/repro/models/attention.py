@@ -26,7 +26,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import lc
+from repro.distributed.sharding import TP_AXIS, lc
 from repro.kernels.ops import paged_attention
 from repro.models.config import ModelConfig
 from repro.models.linear import dense, init_dense
@@ -450,5 +450,8 @@ def apply_attention(cfg: ModelConfig, p: dict, x: jax.Array, *,
     o = o.reshape(b, s, h * hd)
     if taps is not None:
         taps[tap_prefix + "wo"] = o
-    y = dense(p["wo"], o)
+    # under serving TP (cfg.tp > 1, inside the engine's shard_map) the
+    # output projection is row-parallel: each shard holds its heads' slice
+    # of wo, so the matmul is a partial sum reduced over the model axis
+    y = dense(p["wo"], o, reduce_axis=TP_AXIS if cfg.tp > 1 else None)
     return lc(y, "batch", "seq", "embed"), new_cache

@@ -124,6 +124,13 @@ class ModelConfig:
     # --- distribution knobs (consumed by distributed/sharding.py) ---
     fsdp: bool = False              # shard params over the data axis too
     scan_layers: bool = True
+    tp: int = 1                     # tensor-parallel width the model code is
+                                    # *currently running under* (inside the
+                                    # serving shard_map the engine passes a
+                                    # head-localized cfg with tp>1 so
+                                    # row-parallel linears psum over the
+                                    # "model" axis; everywhere else tp == 1
+                                    # and no collective is emitted)
 
     # ------------------------------------------------------------------
     @property

@@ -48,26 +48,32 @@ def materialize(w: Any, dtype) -> jax.Array:
     return w.astype(dtype)
 
 
-def _dense_quantized(w: QuantizedTensor, x: jax.Array, dtype) -> jax.Array:
+def _dense_quantized(w: QuantizedTensor, x: jax.Array, dtype,
+                     reduce_axis: str | None = None) -> jax.Array:
     """2-D quantized matmul: route to the W8A8 int8 path, the fused
-    dequant kernel, or the reference dequant + einsum."""
+    dequant kernel, or the reference dequant + einsum. `reduce_axis` (TP
+    row-parallel: K split over that shard axis) makes the A8 per-token
+    activation grid global via a pmax'ed amax — the psum of the partial
+    outputs itself stays in `dense` below."""
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     if w.act_bits == 8 and w.bits in _KERNEL_BITS:
         if _use_pallas():
             from repro.kernels import ops as kops
 
-            y2 = kops.w8a8_matmul(x2, w, out_dtype=dtype)
+            y2 = kops.w8a8_matmul(x2, w, out_dtype=dtype,
+                                  amax_axis=reduce_axis)
         else:
             from repro.kernels import ref as kref
 
-            xq, xs = quantize_activation(x2, 8)
+            xq, xs = quantize_activation(x2, 8, axis_name=reduce_axis)
             y2 = (kref.w8a8_matmul_ref(xq, w.qw, w.scale, bits=w.bits,
                                        group_size=w.group_size,
                                        k=w.k) * xs).astype(dtype)
     else:
         if w.act_bits:  # legacy per-tensor fake-quant (act_bits != 8)
-            x2 = fake_quant_activation(x2, w.act_bits)
+            x2 = fake_quant_activation(x2, w.act_bits,
+                                       axis_name=reduce_axis)
         if _use_pallas() and w.bits in _KERNEL_BITS:
             from repro.kernels import ops as kops
 
@@ -78,12 +84,19 @@ def _dense_quantized(w: QuantizedTensor, x: jax.Array, dtype) -> jax.Array:
     return y2.reshape(*lead, w.n)
 
 
-def dense(p: dict, x: jax.Array, *, dtype=None) -> jax.Array:
-    """y = x @ w (+ b). x: (..., K). Handles quantized + biased linears."""
+def dense(p: dict, x: jax.Array, *, dtype=None,
+          reduce_axis: str | None = None) -> jax.Array:
+    """y = x @ w (+ b). x: (..., K). Handles quantized + biased linears.
+
+    `reduce_axis` marks a *row-parallel* call under tensor parallelism: the
+    weight's K dim is sharded over that mesh axis, so the per-shard matmul
+    is a partial sum that is psum'ed before the bias is added (adding the
+    replicated bias per-shard would count it `tp` times). Callers pass it
+    only inside the serving shard_map (cfg.tp > 1)."""
     w = p["w"]
     dtype = dtype or x.dtype
     if isinstance(w, QuantizedTensor) and w.qw.ndim == 2:
-        y = _dense_quantized(w, x, dtype)
+        y = _dense_quantized(w, x, dtype, reduce_axis=reduce_axis)
     elif isinstance(w, QuantizedTensor):
         if w.act_bits:
             x = fake_quant_activation(x, w.act_bits)
@@ -93,6 +106,8 @@ def dense(p: dict, x: jax.Array, *, dtype=None) -> jax.Array:
     else:
         y = jnp.einsum("...k,kn->...n", x.astype(dtype), w.astype(dtype),
                        preferred_element_type=jnp.float32).astype(dtype)
+    if reduce_axis is not None:
+        y = jax.lax.psum(y, reduce_axis)
     if "b" in p and p["b"] is not None:
         y = y + p["b"].astype(dtype)
     return y

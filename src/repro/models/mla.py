@@ -14,7 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import lc
+from repro.distributed.sharding import TP_AXIS, lc
 from repro.models.config import ModelConfig
 from repro.models.attention import attention_core, _cache_write, _paged_update
 from repro.models.linear import dense, init_dense, materialize
@@ -161,5 +161,8 @@ def apply_mla(cfg: ModelConfig, p: dict, x: jax.Array, *,
 
     if taps is not None:
         taps[tap_prefix + "wo"] = o
-    y = dense(p["wo"], o)
+    # serving TP: wq/wukv are head-column-parallel, the latent projection
+    # wdkv is replicated (per-token latent, no head dim), and wo is
+    # row-parallel over the local heads' value slice
+    y = dense(p["wo"], o, reduce_axis=TP_AXIS if cfg.tp > 1 else None)
     return lc(y, "batch", "seq", "embed"), new_cache

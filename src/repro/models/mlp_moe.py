@@ -18,7 +18,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import lc
+from repro.distributed.sharding import TP_AXIS, lc
 from repro.models.config import ModelConfig
 from repro.models.linear import dense, dense_experts, init_dense, init_dense_experts
 
@@ -46,7 +46,9 @@ def apply_mlp(cfg: ModelConfig, p: dict, x: jax.Array,
     h = lc(h, "batch", "seq", "mlp")
     if taps is not None:
         taps[tap_prefix + "wo"] = h
-    return dense(p["wo"], h)
+    # serving TP: wi/wg are column-parallel (local d_ff slice), the down
+    # projection is row-parallel and reduces over the model axis
+    return dense(p["wo"], h, reduce_axis=TP_AXIS if cfg.tp > 1 else None)
 
 
 # ------------------------------------------------------------------- MoE

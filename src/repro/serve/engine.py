@@ -25,6 +25,16 @@ engines share the model code:
                          oracle path (see DESIGN.md "Paged-attention decode
                          kernel").
 
+`ContinuousEngine(tp=N)` runs the whole serving step tensor-parallel over
+an N-way "model" mesh: packed weights and scales are placed per the
+serving TP contract (distributed/partitioning.py), the paged KV pools
+shard along their kv-head dim (each device holds its head slice of every
+page), and the prefill/decode jits run the model per-shard under
+`shard_map` with psums at the attention/MLP output projections. Logits
+come out identical on every shard (replicated lm_head), so sampling and
+all host-side bookkeeping — scheduler, page budget, block tables — are
+TP-invariant. See DESIGN.md "Tensor-parallel serving".
+
 The traffic driver (Poisson arrivals, latency percentiles) lives in
 launch/serve.py; admission policy lives in serve/scheduler.py.
 """
@@ -37,11 +47,19 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.core.quant.types import QuantizedTensor, localize_quantized
+from repro.distributed.partitioning import (serve_param_shardings,
+                                            serve_tp_widths, tp_local_cfg)
+from repro.distributed.sharding import TP_AXIS, sharding_ctx
 from repro.models.config import ModelConfig
 from repro.models.transformer import (init_cache, lm_decode, lm_forward,
                                       lm_prefill)
-from repro.serve.kvcache import PagePool, PageSpec, default_page_spec
+from repro.serve.kvcache import (POOL_KEYS, PagePool, PageSpec,
+                                 default_page_spec, paged_pool_pspecs,
+                                 pool_head_dim)
 from repro.serve.sampling import sample
 from repro.serve.scheduler import Request, Scheduler
 
@@ -77,19 +95,22 @@ def _generate_jit(cfg, params, prompts, key, max_new, temperature, top_k,
     return toks.T                                              # (B, max_new)
 
 
-def _maybe_quantize(cfg, params, quant_bits, quant_group, act_bits):
+def _maybe_quantize(cfg, params, quant_bits, quant_group, act_bits,
+                    mesh=None):
     """Pack a float param tree for serving when quant_bits is set (no-op on
     already-packed trees: QuantizedTensor leaves are left untouched).
     quant_group follows the deploy convention: 0 = cfg.serve_quant_group,
-    -1 = per-channel."""
+    -1 = per-channel. With a mesh, packing is followed by the TP placement
+    step — packed and float leaves alike are device_put per the serving
+    contract instead of staying replicated."""
+    from repro.core.quant.deploy import (place_params_for_serving,
+                                         quantize_params_for_serving)
+
     if not quant_bits:
         if act_bits:
             raise ValueError("act_bits requires quant_bits (A8 tags live on "
                              "packed QuantizedTensors)")
-        return params
-    from repro.core.quant.deploy import quantize_params_for_serving
-    from repro.core.quant.types import QuantizedTensor
-
+        return place_params_for_serving(cfg, params, mesh)
     leaves = jax.tree_util.tree_leaves(
         params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
     if any(isinstance(x, QuantizedTensor) for x in leaves):
@@ -98,7 +119,7 @@ def _maybe_quantize(cfg, params, quant_bits, quant_group, act_bits):
                          "and would drop the requested act_bits/group)")
     return quantize_params_for_serving(cfg, params, bits=quant_bits,
                                        group_size=quant_group,
-                                       act_bits=act_bits)
+                                       act_bits=act_bits, mesh=mesh)
 
 
 class ServeEngine:
@@ -150,13 +171,9 @@ def _sample_first_jit(logits, keys, *, temperature, top_k):
                                         top_k=top_k)[0])(logits, keys)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("cfg", "k_steps", "page_size",
-                                    "temperature", "top_k"),
-                   donate_argnames=("cache",))
-def _paged_decode_scan_jit(cfg, params, cache, last_tok, cur_len, active,
-                           block_table, key, *, k_steps, page_size,
-                           temperature, top_k):
+def _decode_scan(cfg, params, cache, last_tok, cur_len, active,
+                 block_table, key, *, k_steps, page_size,
+                 temperature, top_k):
     """K fused decode steps over all slots with on-device sampling.
 
     One dispatch and one host sync per K tokens — the per-step Python/
@@ -164,6 +181,9 @@ def _paged_decode_scan_jit(cfg, params, cache, last_tok, cur_len, active,
     model compute. Slots whose request finishes mid-block keep stepping;
     their extra writes fall off the block table onto the scratch page and
     the host drops the surplus tokens. Returns ((K, S) tokens, cache).
+    Shared by the single-device jit and the shard_map TP jit below — under
+    TP, `cfg` is the head-localized per-shard view and `params`/`cache`
+    are the shard-local slices (tokens, lengths, tables, key replicated).
     """
     n_slots, max_pages = block_table.shape
     sl = jnp.arange(n_slots)
@@ -190,6 +210,83 @@ def _paged_decode_scan_jit(cfg, params, cache, last_tok, cur_len, active,
     (cache, _, _, _), toks = jax.lax.scan(
         body, (cache, last_tok, cur_len, key), None, length=k_steps)
     return toks, cache
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "k_steps", "page_size",
+                                    "temperature", "top_k"),
+                   donate_argnames=("cache",))
+def _paged_decode_scan_jit(cfg, params, cache, last_tok, cur_len, active,
+                           block_table, key, *, k_steps, page_size,
+                           temperature, top_k):
+    return _decode_scan(cfg, params, cache, last_tok, cur_len, active,
+                        block_table, key, k_steps=k_steps,
+                        page_size=page_size, temperature=temperature,
+                        top_k=top_k)
+
+
+# ------------------------------------------------- tensor-parallel variants
+#
+# The TP jits wrap the same model code in a shard_map over the serving
+# mesh: params/caches enter with their placement specs (shard-local heads
+# and mlp slices inside), everything host-shaped — tokens, positions,
+# lengths, block tables, RNG keys — is replicated, and the outputs are
+# replicated logits/tokens plus the re-sharded cache. Row-parallel psums
+# inside the model (cfg.tp > 1) make per-shard activations exact, so every
+# shard samples the same token from the same key — no token collective.
+# QuantizedTensor statics are re-localized at body entry because shard_map
+# splits the qw/scale children but not the recorded (K, N).
+
+def _tp_in_specs(cfg, mesh, params, cache, paged):
+    rep = PartitionSpec()
+    pspecs = serve_param_shardings(mesh, cfg, params, specs_only=True)
+    cspecs = paged_pool_pspecs(cache, mesh, axis=TP_AXIS)
+    paged_specs = jax.tree.map(lambda _: rep, paged)
+    return pspecs, cspecs, paged_specs
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mesh"),
+                   donate_argnames=("cache",))
+def _paged_prefill_tp_jit(cfg, mesh, params, tokens, cache, positions, paged):
+    lcfg = tp_local_cfg(cfg)
+    rep = PartitionSpec()
+    pspecs, cspecs, paged_specs = _tp_in_specs(cfg, mesh, params, cache, paged)
+
+    def body(params, tokens, cache, positions, paged):
+        params = localize_quantized(params)
+        with sharding_ctx(None):   # no nested GSPMD constraints under shard_map
+            return lm_prefill(lcfg, params, tokens, cache,
+                              positions=positions, paged=paged)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(pspecs, rep, cspecs, rep, paged_specs),
+                     out_specs=(rep, cspecs), check_rep=False)(
+        params, tokens, cache, positions, paged)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "mesh", "k_steps", "page_size",
+                                    "temperature", "top_k"),
+                   donate_argnames=("cache",))
+def _paged_decode_scan_tp_jit(cfg, mesh, params, cache, last_tok, cur_len,
+                              active, block_table, key, *, k_steps,
+                              page_size, temperature, top_k):
+    lcfg = tp_local_cfg(cfg)
+    rep = PartitionSpec()
+    pspecs, cspecs, _ = _tp_in_specs(cfg, mesh, params, cache, {})
+
+    def body(params, cache, last_tok, cur_len, active, block_table, key):
+        params = localize_quantized(params)
+        with sharding_ctx(None):
+            return _decode_scan(lcfg, params, cache, last_tok, cur_len,
+                                active, block_table, key, k_steps=k_steps,
+                                page_size=page_size, temperature=temperature,
+                                top_k=top_k)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(pspecs, cspecs, rep, rep, rep, rep, rep),
+                     out_specs=(rep, cspecs), check_rep=False)(
+        params, cache, last_tok, cur_len, active, block_table, key)
 
 
 class ContinuousEngine:
@@ -240,12 +337,44 @@ class ContinuousEngine:
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  quant_bits: int = 0, quant_group: int = 0,
                  act_bits: int = 0, paged_attn: Optional[str] = None,
-                 prefix_share: bool = False, chunked_prefill: int = 0):
+                 prefix_share: bool = False, chunked_prefill: int = 0,
+                 tp: int = 1, mesh=None):
         if cfg.enc_dec:
             raise NotImplementedError("paged serving covers decoder-only LMs")
+        if mesh is not None and tp == 1:
+            tp = int(mesh.shape.get(TP_AXIS, 1))
+        if tp > 1:
+            specs = cfg.all_layer_specs()
+            if any(s.kind != "attn" for s in specs) or \
+                    any(s.mlp == "moe" for s in specs):
+                # EP-sharded MoE serving and SSM-state sharding are open
+                # items (ROADMAP) — the placement contract below only
+                # covers dense attention decoders
+                raise NotImplementedError(
+                    "tensor-parallel serving covers dense attention "
+                    "decoders (no MoE, no SSM blocks)")
+            if tp not in serve_tp_widths(cfg):
+                raise ValueError(
+                    f"tp={tp} is illegal for {cfg.name}: GQA head groups "
+                    f"must stay whole per shard and d_ff must split evenly "
+                    f"— legal widths {serve_tp_widths(cfg)}")
+            if mesh is None:
+                devs = jax.devices()
+                if len(devs) < tp:
+                    raise ValueError(f"tp={tp} needs {tp} devices, have "
+                                     f"{len(devs)} (on CPU force more with "
+                                     f"XLA_FLAGS=--xla_force_host_platform_"
+                                     f"device_count=N)")
+                mesh = jax.sharding.Mesh(np.asarray(devs[:tp]), (TP_AXIS,))
+            if int(mesh.shape.get(TP_AXIS, 1)) != tp:
+                raise ValueError(f"mesh axis {TP_AXIS!r} has size "
+                                 f"{mesh.shape.get(TP_AXIS)} != tp={tp}")
+            cfg = cfg.replace(tp=tp)
+        self.tp = tp
+        self.mesh = mesh if tp > 1 else None
         if prefix_share or chunked_prefill:
             has_ssm = any(spec.kind != "attn"
-                          for spec in cfg.prefix_pattern + cfg.pattern)
+                          for spec in cfg.all_layer_specs())
             if has_ssm or cfg.attention == "mla":
                 # SSM state is not page-addressed (a shared page carries no
                 # recurrence state) and MLA's non-absorbed prefill never
@@ -264,7 +393,7 @@ class ContinuousEngine:
             cfg = cfg.replace(paged_attn_impl=paged_attn)
         self.cfg = cfg
         self.params = _maybe_quantize(cfg, params, quant_bits, quant_group,
-                                      act_bits)
+                                      act_bits, mesh=self.mesh)
         self.n_slots = n_slots
         self.eos_id = eos_id
         self.prefill_bucket = max(1, prefill_bucket)
@@ -288,11 +417,25 @@ class ContinuousEngine:
         self.pool = PagePool(self.spec, n_slots,
                              prefix_cache=self.prefix_share)
         self.sched = Scheduler(n_slots, self.pool,
-                               prefix_share=self.prefix_share)
+                               prefix_share=self.prefix_share, tp=self.tp)
         self.cache = init_cache(cfg, n_slots, self.spec.max_len,
                                 paged=self.spec)
-        self.cur_len = np.zeros(n_slots, np.int64)   # tokens in cache per slot
-        self.last_tok = np.zeros(n_slots, np.int64)  # next token to feed
+        if self.tp > 1:
+            # shard every paged pool along its kv-head dim; page axes stay
+            # whole on purpose (the scheduler's page budget must be
+            # shard-invariant — asserted below)
+            self.cache = jax.tree.map(
+                lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
+                self.cache, paged_pool_pspecs(self.cache, self.mesh,
+                                              axis=TP_AXIS))
+            self._assert_tp_placement()
+        # host mirrors are int32 end-to-end: every jit consumes int32, so an
+        # int64 mirror would silently truncate at the cast boundary — keep
+        # the dtypes aligned and the geometry provably in range
+        assert self.spec.max_len < np.iinfo(np.int32).max, \
+            "per-slot capacity overflows the int32 host/jit length contract"
+        self.cur_len = np.zeros(n_slots, np.int32)   # tokens in cache per slot
+        self.last_tok = np.zeros(n_slots, np.int32)  # next token to feed
         self.active = np.zeros(n_slots, bool)
         self._prefilling: dict[int, Request] = {}    # slot -> mid-prompt req
         self._key, self._first_key = jax.random.split(jax.random.PRNGKey(seed))
@@ -301,6 +444,124 @@ class ContinuousEngine:
         self.n_prefills = 0
         self.n_prefill_tokens = 0    # real prompt tokens actually prefilled
         self.n_shared_tokens = 0     # prompt tokens served from the prefix cache
+
+    # -------------------------------------------------------- TP placement
+    _TP_COL = ("attn/wq/w", "attn/wk/w", "attn/wv/w", "attn/wukv/w",
+               "mlp/wi/w", "mlp/wg/w")
+    _TP_ROW = ("attn/wo/w", "mlp/wo/w")
+
+    def _iter_param_leaves(self):
+        def walk(tree, prefix):
+            if isinstance(tree, QuantizedTensor):
+                yield prefix + "#qw", tree.qw
+                yield prefix + "#scale", tree.scale
+            elif isinstance(tree, dict):
+                for k, v in tree.items():
+                    yield from walk(v, f"{prefix}/{k}" if prefix else k)
+            else:
+                yield prefix, tree
+
+        yield from walk(self.params, "")
+
+    def _iter_cache_leaves(self):
+        def walk(tree, key=None):
+            if isinstance(tree, dict):
+                for k, v in tree.items():
+                    yield from walk(v, k)
+            else:
+                yield key, tree
+
+        yield from walk(self.cache)
+
+    @staticmethod
+    def _shard_shape(leaf):
+        sh = getattr(leaf, "sharding", None)
+        if sh is None:
+            return tuple(leaf.shape)
+        return tuple(sh.shard_shape(leaf.shape))
+
+    def _tp_exempt_replicated(self, path, leaf) -> bool:
+        """The one projection leaf legitimately replicated under TP: a
+        per-channel (1, N) scale of a row-parallel weight — every K shard
+        needs the whole output-channel row. Shared by the placement assert
+        and the report so they can never disagree."""
+        base = path.rsplit("#", 1)[0]
+        return (path.endswith("#scale") and leaf.shape[-2] == 1
+                and any(base.endswith(t) for t in self._TP_ROW))
+
+    def _assert_tp_placement(self) -> None:
+        """Verify the placement contract on the live buffers, not on specs:
+        every attention/MLP projection leaf — packed qw AND scale included —
+        is sharded over the model axis, and every paged pool leaf holds only
+        its kv-head slice per shard while the page geometry stays global
+        (the scheduler's whole-budget page gating is therefore TP-invariant
+        by construction). Raises with an actionable message instead of
+        serving silently replicated weights."""
+        bad = []
+        for path, leaf in self._iter_param_leaves():
+            base = path.rsplit("#", 1)[0]
+            if not any(base.endswith(t) for t in self._TP_COL + self._TP_ROW):
+                continue
+            if self._tp_exempt_replicated(path, leaf):
+                continue
+            if self._shard_shape(leaf) == tuple(leaf.shape):
+                bad.append(path)
+        if bad:
+            raise ValueError(
+                f"tp={self.tp}: projection leaves stayed replicated: {bad}. "
+                f"For grouped quantization every shard must hold whole scale "
+                f"groups — pick a group_size dividing K/tp, or per-channel "
+                f"(group_size=-1)")
+        for key, leaf in self._iter_cache_leaves():
+            if key not in POOL_KEYS:
+                continue
+            hdim = pool_head_dim(key, leaf.ndim)
+            shard = self._shard_shape(leaf)
+            assert (shard[:hdim] == tuple(leaf.shape[:hdim])
+                    and shard[hdim + 1:] == tuple(leaf.shape[hdim + 1:])), \
+                f"{key}: page geometry must be identical on every shard"
+            if leaf.shape[hdim] % self.tp == 0:
+                assert shard[hdim] * self.tp == leaf.shape[hdim], \
+                    f"{key}: kv-head dim left replicated under tp={self.tp}"
+
+    def tp_placement_report(self) -> dict:
+        """Per-device placement summary: bytes each device holds for params
+        and paged KV pools, plus any quantized/pool leaves left replicated.
+        Drives benchmarks/tp_serve_bench.py's modeled per-device HBM and the
+        TP test suite's no-replicated-leaves assertion."""
+        def nbytes(shape, dtype):
+            return int(np.prod(shape)) * np.dtype(dtype).itemsize
+
+        rep = {"tp": self.tp,
+               "params": {"global_bytes": 0, "per_device_bytes": 0},
+               "kv": {"global_bytes": 0, "per_device_bytes": 0},
+               "replicated_quant_leaves": [],
+               "replicated_pool_leaves": []}
+        for path, leaf in self._iter_param_leaves():
+            shard = self._shard_shape(leaf)
+            rep["params"]["global_bytes"] += nbytes(leaf.shape, leaf.dtype)
+            rep["params"]["per_device_bytes"] += nbytes(shard, leaf.dtype)
+            # same classification as _assert_tp_placement: only projection
+            # leaves the contract says to shard count as violations (e.g.
+            # quantized MLA wdkv is replicated *by design* — per-token
+            # latent, no head dim — and must not be reported)
+            base = path.rsplit("#", 1)[0]
+            is_proj = any(base.endswith(t)
+                          for t in self._TP_COL + self._TP_ROW)
+            if ("#" in path and is_proj and self.tp > 1
+                    and shard == tuple(leaf.shape)
+                    and not self._tp_exempt_replicated(path, leaf)):
+                rep["replicated_quant_leaves"].append(path)
+        for key, leaf in self._iter_cache_leaves():
+            rep["kv"]["global_bytes"] += nbytes(leaf.shape, leaf.dtype)
+            shard = self._shard_shape(leaf)
+            rep["kv"]["per_device_bytes"] += nbytes(shard, leaf.dtype)
+            if key in POOL_KEYS:
+                hdim = pool_head_dim(key, leaf.ndim)
+                if (self.tp > 1 and shard == tuple(leaf.shape)
+                        and leaf.shape[hdim] % self.tp == 0):
+                    rep["replicated_pool_leaves"].append(key)
+        return rep
 
     # ------------------------------------------------------------- intake
     def submit(self, prompt: np.ndarray, *, max_new: int = 32,
@@ -446,9 +707,14 @@ class ContinuousEngine:
         else:
             paged = {"bt_rows": jnp.asarray(self.pool.tables[slots]),
                      "slots": jnp.asarray(slots)}
-        logits, self.cache = _paged_prefill_jit(
-            self.cfg, self.params, jnp.asarray(toks), self.cache,
-            jnp.asarray(pos), paged)
+        if self.tp > 1:
+            logits, self.cache = _paged_prefill_tp_jit(
+                self.cfg, self.mesh, self.params, jnp.asarray(toks),
+                self.cache, jnp.asarray(pos), paged)
+        else:
+            logits, self.cache = _paged_prefill_jit(
+                self.cfg, self.params, jnp.asarray(toks), self.cache,
+                jnp.asarray(pos), paged)
         self.n_prefills += 1
         self.n_prefill_tokens += sum(end - start for _, _, start, end in items)
         finish = []
@@ -491,14 +757,25 @@ class ContinuousEngine:
         # bucket the attention read width (pow2 pages over the deepest slot
         # at block end) so shallow traffic doesn't pay max_len-wide gathers
         width = self._read_width(int(self.cur_len[act].max()) + k_steps)
-        toks, self.cache = _paged_decode_scan_jit(
-            self.cfg, self.params, self.cache,
-            jnp.asarray(self.last_tok.astype(np.int32)),
-            jnp.asarray(self.cur_len.astype(np.int32)),
-            jnp.asarray(act),
-            jnp.asarray(np.ascontiguousarray(self.pool.tables[:, :width])),
-            sk, k_steps=k_steps, page_size=self.spec.page_size,
-            temperature=self.temperature, top_k=self.top_k)
+        # host mirrors feed the jit directly — int32 end-to-end, no cast
+        # boundary where an int64 length could silently truncate
+        assert (self.cur_len.dtype == np.int32
+                and self.last_tok.dtype == np.int32), \
+            "engine host state drifted off the int32 jit contract"
+        # .copy(): the transfer of a host buffer may be deferred past this
+        # call's (async) dispatch, and the engine mutates these mirrors
+        # right after — handing jax the live array is a data race (the old
+        # .astype(int32) made an incidental copy; keep an explicit one)
+        args = (self.params, self.cache, jnp.asarray(self.last_tok.copy()),
+                jnp.asarray(self.cur_len.copy()), jnp.asarray(act),
+                jnp.asarray(self.pool.tables[:, :width].copy()), sk)
+        kw = dict(k_steps=k_steps, page_size=self.spec.page_size,
+                  temperature=self.temperature, top_k=self.top_k)
+        if self.tp > 1:
+            toks, self.cache = _paged_decode_scan_tp_jit(
+                self.cfg, self.mesh, *args, **kw)
+        else:
+            toks, self.cache = _paged_decode_scan_jit(self.cfg, *args, **kw)
         self.cur_len[act] += k_steps
         self.n_decode_steps += k_steps
         return np.asarray(toks)

@@ -60,12 +60,33 @@ class Request:
 
 
 class Scheduler:
-    """Admission queue over a fixed slot pool backed by a PagePool."""
+    """Admission queue over a fixed slot pool backed by a PagePool.
+
+    Admission accounting is deliberately *tensor-parallel-invariant*: pages
+    and budgets are counted in tokens, and under TP serving the KV pools
+    shard along the kv-head dim only — every shard holds its head slice of
+    every page, so the page count, block tables, and whole-budget gating
+    are identical on every shard and the scheduler needs no TP awareness.
+    `tp` is accepted purely to pin that contract with an assert (the engine
+    separately verifies on the live buffers that no pool leaf is sharded
+    along a page axis).
+    """
 
     def __init__(self, n_slots: int, pool: PagePool,
-                 prefix_share: bool = False):
+                 prefix_share: bool = False, tp: int = 1):
+        # the page budget must not scale with tp: admission math is host-
+        # side and token-denominated, so the block tables it hands the
+        # engine must themselves be host arrays (replicated onto every
+        # shard), never device-sharded state. If a future placement splits
+        # the page axis, admission needs per-shard budgets and this module
+        # is the wrong place to hide that. (The engine separately asserts
+        # on the live pool buffers that no page axis is sharded.)
+        assert tp >= 1, tp
+        assert type(pool.tables) is np.ndarray, \
+            "block tables must stay host-side (shard-invariant) under TP"
         self.n_slots = n_slots
         self.pool = pool
+        self.tp = tp
         self.prefix_share = prefix_share
         self._pending: list[Request] = []     # submitted, sorted by arrival
         self.queue: deque[Request] = deque()  # arrived, waiting for a slot

@@ -1,0 +1,373 @@
+"""Tensor-parallel serving tests: TP=2/4 greedy tokens bit-identical to
+TP=1 across the config zoo (dense/GQA/SWA/int8-KV, W4 grouped + per-channel,
+W8A8, MLA), fused-vs-gather parity on sharded pools, a prefix-cache-hit
+case, verifiable placement (no replicated qw/scale/page leaves), scheduler
+TP-invariance, engine host-state int32 regression, and the grouped-quant
+scale sharding contract in distributed/partitioning.py.
+
+The TP>1 cases need a multi-device host; the tier-1 run on a single CPU
+device skips them. The `tp-cpu` CI job (and local runs) force them on:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m pytest -x -q tests/test_tp_serve.py
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import TINY, get_config
+from repro.core.quant.types import quantize, quantize_stacked
+from repro.distributed import partitioning as P
+from repro.distributed.sharding import spec_for
+from repro.models.config import LayerSpec, MLAConfig, MoEConfig
+from repro.models.transformer import init_lm
+from repro.serve.engine import ContinuousEngine
+from repro.serve.kvcache import PagePool, PageSpec
+from repro.serve.scheduler import Request, Scheduler
+
+NDEV = len(jax.devices())
+needs4 = pytest.mark.skipif(
+    NDEV < 4, reason="needs 4 local devices (run with XLA_FLAGS="
+                     "--xla_force_host_platform_device_count=4)")
+
+BASE = TINY.replace(n_repeats=2, d_model=64, head_dim=16, d_ff=128)
+GQA = BASE.replace(n_heads=8, n_kv_heads=4, head_dim=8)
+MLA = BASE.replace(attention="mla", n_heads=4, n_kv_heads=4,
+                   mla=MLAConfig(kv_lora_rank=32, qk_nope_head_dim=16,
+                                 qk_rope_head_dim=8, v_head_dim=16))
+# four shapes keep compile count small; one ragged (9) prompt
+WORKLOAD = [(8, 6), (16, 4), (24, 5), (9, 4)]
+
+
+def _run(cfg, params, tp, **kw):
+    eng = ContinuousEngine(cfg, params, n_slots=4, max_len=64, page_size=16,
+                           prefill_bucket=8, tp=tp, **kw)
+    rng = np.random.default_rng(0)
+    handles = [eng.submit(rng.integers(0, cfg.vocab_size, plen), max_new=mn)
+               for plen, mn in WORKLOAD]
+    eng.run(max_steps=500)
+    return [h.tokens for h in handles], eng
+
+
+# ------------------------------------------------------ token identity zoo
+
+ZOO = [
+    ("dense-w4", BASE, 4, dict(quant_bits=4, quant_group=-1)),
+    ("gqa-w4-grouped", GQA, 4, dict(quant_bits=4, quant_group=8)),
+    ("gqa-w4-grouped-tp2", GQA, 2, dict(quant_bits=4, quant_group=8)),
+    ("gqa-swa", GQA.replace(attn_window=16), 2, {}),
+    ("gqa-int8kv-w4", GQA.replace(kv_cache_bits=8), 4,
+     dict(quant_bits=4, quant_group=-1)),
+    ("dense-w8a8", BASE, 2, dict(quant_bits=8, quant_group=-1, act_bits=8)),
+    # W3A8 routes through the legacy per-tensor fake-quant activation path
+    # (bits=3 has no kernel) — its amax must be pmax'ed under TP too
+    ("dense-w3a8", BASE, 2, dict(quant_bits=3, quant_group=-1, act_bits=8)),
+    ("mla-float", MLA, 2, {}),
+    # quantized MLA: wq/wukv/wo shard, wdkv stays replicated by design
+    # (per-token latent) and must not trip the placement report
+    ("mla-w4", MLA, 2, dict(quant_bits=4, quant_group=-1)),
+]
+
+
+@needs4
+@pytest.mark.parametrize("name,cfg,tp,kw", ZOO, ids=[z[0] for z in ZOO])
+def test_tp_token_identity(name, cfg, tp, kw):
+    """TP=N greedy tokens are bit-identical to the TP=1 engine."""
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    t1, _ = _run(cfg, params, 1, **kw)
+    tn, eng = _run(cfg, params, tp, **kw)
+    for rid, (a, b) in enumerate(zip(t1, tn)):
+        assert a == b, f"{name}: request {rid} diverged under tp={tp}"
+    assert eng.pool.n_free == eng.spec.n_pages - 1  # pages all returned
+
+
+@needs4
+def test_tp_fused_vs_gather_on_sharded_pools():
+    """The fused paged-attention kernel and the gather oracle agree on
+    head-sharded pools (int8 KV so the inline dequant rides the shards)."""
+    cfg = GQA.replace(kv_cache_bits=8)
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    fused, _ = _run(cfg, params, 4, quant_bits=4, quant_group=-1,
+                    paged_attn="fused")
+    gather, _ = _run(cfg, params, 4, quant_bits=4, quant_group=-1,
+                     paged_attn="gather")
+    assert fused == gather
+
+
+@needs4
+def test_tp_prefix_cache_hit():
+    """Prefix-cache hits stitch shared pages into TP-sharded pools: a
+    second wave sharing a 16-token (full-page) system prompt reuses pages
+    and still matches the TP=1 engine token-for-token."""
+
+    def run(tp):
+        eng = ContinuousEngine(BASE, init_lm(BASE, jax.random.PRNGKey(0)),
+                               n_slots=4, max_len=64, page_size=16,
+                               prefill_bucket=8, tp=tp, prefix_share=True,
+                               chunked_prefill=16)
+        rng = np.random.default_rng(3)
+        system = rng.integers(0, BASE.vocab_size, 16)
+        # wave 1 registers the system page; wave 2 prefix-hits it (two
+        # runs, or simultaneous admission would race the registration)
+        handles = [eng.submit(np.concatenate(
+            [system, rng.integers(0, BASE.vocab_size, 8)]), max_new=4)]
+        eng.run(max_steps=500)
+        for i in range(3):
+            tail = rng.integers(0, BASE.vocab_size, 8 + 4 * i)
+            handles.append(eng.submit(np.concatenate([system, tail]),
+                                      max_new=4))
+        eng.run(max_steps=500)
+        return [h.tokens for h in handles], eng.n_shared_tokens
+
+    t1, shared1 = run(1)
+    t4, shared4 = run(4)
+    assert t1 == t4
+    assert shared1 == shared4 == 3 * 16   # wave 2 hit the cached system page
+
+
+@needs4
+def test_w8a8_activation_grid_global_under_tp():
+    """Row-parallel W8A8 must quantize activations on the single-device
+    grid: the per-token amax is pmax'ed over the shard axis, so TP never
+    changes the quantization itself (only float summation order). A
+    shard-local amax would yield a different int8 grid per shard and
+    silently different logits than TP=1."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec
+
+    from repro.core.quant.types import quantize_activation
+
+    mesh = Mesh(np.asarray(jax.devices()[:4]), ("model",))
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64))
+    _, s_ref = quantize_activation(x, 8)
+
+    def body(xl):
+        _, s = quantize_activation(xl, 8, axis_name="model")
+        return s
+
+    s_tp = shard_map(body, mesh=mesh,
+                     in_specs=PartitionSpec(None, "model"),
+                     out_specs=PartitionSpec(None, None),
+                     check_rep=False)(x)
+    np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(s_tp))
+
+
+# ------------------------------------------------------------- placement
+
+@needs4
+def test_tp_placement_verifiably_sharded():
+    """No replicated qw/scale/page leaves on the W4 GQA config: every
+    projection leaf and every KV pool leaf holds only its model-axis slice
+    per device, while the page geometry stays global (shard-invariant
+    scheduler budget)."""
+    params = init_lm(GQA, jax.random.PRNGKey(0))
+    _, eng = _run(GQA, params, 4, quant_bits=4, quant_group=8)
+    rep = eng.tp_placement_report()
+    assert rep["replicated_quant_leaves"] == []
+    assert rep["replicated_pool_leaves"] == []
+    assert rep["params"]["per_device_bytes"] < rep["params"]["global_bytes"]
+    # pool leaves: kv-head dim divided by 4, page axes untouched
+    from repro.serve.kvcache import POOL_KEYS, pool_head_dim
+    for key, leaf in eng._iter_cache_leaves():
+        if key not in POOL_KEYS:
+            continue
+        hdim = pool_head_dim(key, leaf.ndim)
+        shard = eng._shard_shape(leaf)
+        assert shard[hdim] * 4 == leaf.shape[hdim]
+        assert shard[:hdim] == tuple(leaf.shape[:hdim])
+    # KV per-device bytes track the head split (scale pools + scan stacking
+    # included, so exactly global/4 for this attention-only config)
+    assert rep["kv"]["per_device_bytes"] * 4 == rep["kv"]["global_bytes"]
+
+
+@needs4
+def test_tp_placement_report_exempts_mla_latent():
+    """Quantized MLA serves under TP with wdkv replicated by design (the
+    latent projection has no head dim): the placement report must not list
+    it as a violation, and the latent pools stay replicated."""
+    params = init_lm(MLA, jax.random.PRNGKey(0))
+    _, eng = _run(MLA, params, 2, quant_bits=4, quant_group=-1)
+    rep = eng.tp_placement_report()
+    assert rep["replicated_quant_leaves"] == []
+    assert rep["replicated_pool_leaves"] == []    # KVH==1: structurally so
+
+
+@needs4
+def test_tp_grouped_scale_misalignment_raises():
+    """A group size that leaves partial scale groups per shard must fail
+    loudly at placement, not serve silently replicated weights."""
+    # d_ff=128, tp=4 -> K/tp=32 rows of mlp/wo per shard; gs=64 -> groups
+    # of 64 rows straddle shards (G=2 not divisible by 4)
+    params = init_lm(BASE, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="scale groups"):
+        ContinuousEngine(BASE, params, n_slots=4, max_len=64, page_size=16,
+                         tp=4, quant_bits=4, quant_group=64)
+
+
+# ----------------------------------------------------------- legal widths
+
+def test_tp_width_legality_gqa_alignment():
+    """Legal TP widths divide the kv-head count (GQA groups stay whole) and
+    the MLP hidden dim; MLA is constrained by query heads only."""
+    assert P.serve_tp_widths(GQA) == [1, 2, 4]              # kvh=4 caps it
+    assert P.serve_tp_widths(GQA.replace(n_kv_heads=1)) == [1]   # MQA
+    assert P.serve_tp_widths(MLA) == [1, 2, 4]              # latent KV
+    assert 8 in P.serve_tp_widths(GQA.replace(n_kv_heads=8, d_ff=128))
+
+
+def test_tp_illegal_width_raises():
+    params = init_lm(GQA, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="legal widths"):
+        ContinuousEngine(GQA, params, n_slots=4, max_len=64, tp=3)
+
+
+def test_tp_moe_and_ssm_gated():
+    moe_cfg = BASE.replace(
+        pattern=(LayerSpec(kind="attn", mlp="moe"),),
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=64))
+    with pytest.raises(NotImplementedError, match="dense attention"):
+        ContinuousEngine(moe_cfg, init_lm(moe_cfg, jax.random.PRNGKey(0)),
+                         n_slots=4, max_len=64, tp=4)
+
+
+# ------------------------------------------- scheduler TP invariance
+
+def test_scheduler_page_budget_tp_invariant():
+    """Same pool geometry + request sequence -> identical admission trace
+    for tp=1 and tp=4: the page budget is counted in tokens and pools shard
+    along kv-heads only, so admission needs no TP awareness."""
+
+    def trace(tp):
+        pool = PagePool(PageSpec(n_pages=9, page_size=8, max_pages=4), 3)
+        sched = Scheduler(3, pool, tp=tp)
+        for i, budget in enumerate([16, 16, 24, 8, 40]):
+            sched.submit(Request(rid=i, prompt=np.zeros(8, np.int32),
+                                 max_new=budget - 8, arrival=float(i)))
+        events = []
+        for t in range(10):
+            admitted = sched.admit(float(t))
+            events.append([(s, r.rid) for s, r in admitted])
+            if t == 2 and sched.slots[0] is not None:
+                sched.retire(0, float(t))
+                events.append(("retire", 0))
+        return events
+
+    assert trace(1) == trace(4)
+
+
+# ------------------------------------------- engine host-state int32
+
+def test_engine_host_state_int32_end_to_end():
+    """Regression for the int64 host-mirror drift: cur_len/last_tok stay
+    int32 through admit -> prefill -> decode -> retire, so there is no
+    cast boundary where a long-context length could silently truncate."""
+    params = init_lm(BASE, jax.random.PRNGKey(0))
+    eng = ContinuousEngine(BASE, params, n_slots=2, max_len=64, page_size=16,
+                           prefill_bucket=8)
+    assert eng.cur_len.dtype == np.int32
+    assert eng.last_tok.dtype == np.int32
+    eng.submit(np.arange(8), max_new=4)
+    eng.run(max_steps=100)
+    assert eng.cur_len.dtype == np.int32
+    assert eng.last_tok.dtype == np.int32
+
+
+# --------------------------- grouped-quant scale sharding (partitioning)
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH = FakeMesh({"data": 2, "model": 4})
+
+
+def _specs(tree, rules):
+    def fn(path, leaf, names):
+        return spec_for(leaf.shape, names, mesh=MESH, rules=rules)
+
+    return P._walk(tree, "", fn)
+
+
+def _qt(k, n, gs, lead=()):
+    w = jax.random.normal(jax.random.PRNGKey(0), lead + (k, n))
+    return quantize_stacked(w, 4, gs) if lead else quantize(w, 4, gs)
+
+
+def test_param_rules_scale_inherits_output_dim_sharding():
+    """For every dense _PARAM_RULES entry the grouped-quant scale leaf
+    (K/gs, N) shards its output dim exactly like the packed weight."""
+    rules = P.rules_for_config(BASE)
+    tree = {"stack": {"p0": {
+        "attn": {"wq": {"w": _qt(64, 64, 16)}, "wk": {"w": _qt(64, 32, 16)},
+                 "wv": {"w": _qt(64, 32, 16)}, "wo": {"w": _qt(64, 64, 16)}},
+        "mlp": {"wi": {"w": _qt(64, 128, 16)}, "wo": {"w": _qt(128, 64, 16)}},
+    }}}
+    specs = _specs(tree, rules)
+    for name in ("wq", "wk", "wv"):
+        qt = specs["stack"]["p0"]["attn"][name]["w"]
+        assert qt.qw[-1] == "model" and qt.scale[-1] == "model", name
+    mlp = specs["stack"]["p0"]["mlp"]
+    assert mlp["wi"]["w"].qw[-1] == "model"
+    assert mlp["wi"]["w"].scale[-1] == "model"
+    # row-parallel wo: K dim sharded on qw -> group dim sharded on scale
+    assert mlp["wo"]["w"].qw[0] == "model"
+    assert mlp["wo"]["w"].scale[0] == "model"
+
+
+def test_param_rules_scale_sharding_moe_expert_slabs():
+    """Scan-stacked MoE expert slabs (L, E, K, N): the scale inherits the
+    expert/output sharding of the packed weight in both the EP regime
+    (expert dim on model) and the expert-TP regime (expert_ff on model)."""
+    tree = {"stack": {"p0": {"moe": {"experts": {
+        "wi": {"w": _qt(64, 128, 8, lead=(2, 4))},
+        "wo": {"w": _qt(128, 64, 8, lead=(2, 4))},
+    }}}}}
+    # 64 DeepSeek experts % 4 == 0 -> EP regime on a model=4 mesh
+    ep_rules = P.rules_for_config(get_config("deepseek-v2-lite-16b"), MESH)
+    specs = _specs(tree, ep_rules)
+    wi = specs["stack"]["p0"]["moe"]["experts"]["wi"]["w"]
+    assert wi.qw[1] == "model" and wi.scale[1] == "model"      # expert dim
+    assert wi.qw[-1] == wi.scale[-1]
+    # 8 Mixtral experts % 16 != 0 -> expert-TP regime on a model=16 mesh
+    mesh16 = FakeMesh({"data": 2, "model": 16})
+
+    def specs16(t, rules):
+        def fn(path, leaf, names):
+            return spec_for(leaf.shape, names, mesh=mesh16, rules=rules)
+
+        return P._walk(t, "", fn)
+
+    etp_rules = P.rules_for_config(get_config("mixtral-8x22b"), mesh16)
+    specs = specs16(tree, etp_rules)
+    wi = specs["stack"]["p0"]["moe"]["experts"]["wi"]["w"]
+    assert wi.qw[-1] == "model" and wi.scale[-1] == "model"    # expert_ff
+    wo = specs["stack"]["p0"]["moe"]["experts"]["wo"]["w"]
+    assert wo.qw[-2] == "model" and wo.scale[-2] == "model"    # K -> groups
+
+
+def test_per_channel_scale_stays_whole_on_row_parallel():
+    """Per-channel (1, N) scales never shard their group dim: every K shard
+    needs the full output-channel scale row."""
+    rules = P.rules_for_config(BASE)
+    tree = {"stack": {"p0": {"mlp": {"wo": {"w": _qt(128, 64, -1)}}}}}
+    specs = _specs(tree, rules)
+    wo = specs["stack"]["p0"]["mlp"]["wo"]["w"]
+    assert wo.qw[0] == "model" and wo.scale[0] is None
+
+
+def test_serve_specs_drop_k_sharding_jointly():
+    """When the scale groups don't divide the TP width, the serving specs
+    drop the K sharding from qw AND scale together — never only one side."""
+    class M(FakeMesh):
+        pass
+
+    mesh = M({"model": 4})
+    qt = _qt(128, 64, 64)                    # G=2, tp=4 -> indivisible
+    qw_spec, sc_spec = P._qt_serve_spec(
+        qt, ("mlp", "embed_fsdp"), mesh, P.serve_tp_rules(BASE))
+    assert qw_spec[0] is None and sc_spec[0] is None
+    qt_ok = _qt(128, 64, 16)                 # G=8 -> divisible
+    qw_spec, sc_spec = P._qt_serve_spec(
+        qt_ok, ("mlp", "embed_fsdp"), mesh, P.serve_tp_rules(BASE))
+    assert qw_spec[0] == "model" and sc_spec[0] == "model"
