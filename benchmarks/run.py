@@ -13,6 +13,8 @@ model) are cached under .cache/ — the first run trains it (~10 min CPU).
   kernels dequant-matmul microbench                   (deployment path)
   quant_serve  quantized-vs-float serving + expert/W8A8 kernel rows
                (writes BENCH_quant_serve.json)
+  spec    self-speculative decoding: W2/W3 draft + verify vs target-only
+          (writes BENCH_spec.json)
 """
 from __future__ import annotations
 
@@ -28,7 +30,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig1_distribution, kernels_bench,
-                            paged_attn_bench, quant_serve_bench,
+                            paged_attn_bench, quant_serve_bench, spec_bench,
                             table2_weight_only,
                             table3_runtime, table4_ptq_methods, table6_iters,
                             table8_calibration, table9_losses, table10_awq)
@@ -45,6 +47,7 @@ def main() -> None:
         "kernels": kernels_bench.run,
         "quant_serve": quant_serve_bench.run,
         "paged_attn": paged_attn_bench.run,
+        "spec": spec_bench.run,
     }
     selected = (args.only.split(",") if args.only else list(suites))
 

@@ -33,7 +33,7 @@ def quantize_params_for_serving(cfg: ModelConfig, params: dict,
     if not bits:
         return place_params_for_serving(cfg, params, mesh)
     # max_ndim=4: scan-stacked MoE expert weights are (L, E, K, N) — they
-    # pack to a stacked (L, E, K/vpb, N) layout consumed per-layer by the
+    # pack to a stacked (L, E, packed_rows(K), N) layout consumed per-layer by the
     # expert-batched kernel (previously they silently stayed float)
     for path, lin in list(iter_linears(params, max_ndim=4)):
         if any(s in path for s in _SKIP):

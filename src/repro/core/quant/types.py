@@ -7,9 +7,13 @@ Scales are per output-channel and per input-group: scale[g, n] applies to
 rows k in [g*group_size, (g+1)*group_size).
 
 Packing: values are stored offset-binary (u = q + qmax, fits in `bits` bits)
-and packed along K into uint8, `8 // bits` values per byte (bits in {2,4,8};
-3-bit is stored unpacked, one value per byte — density noted in DESIGN.md).
-Packing along K keeps unpacking lane-local on TPU (see kernels/dequant_matmul).
+and packed along K into uint8. The layout is grouped: `pack_layout(bits)`
+gives (bytes_per_group, values_per_group) — 2-bit packs 4 values/byte,
+4-bit 2 values/byte, 8-bit is pass-through, and 3-bit packs 8 values into a
+24-bit little-endian word stored as 3 consecutive bytes (0.375 B/value, so
+W3 rides the same sub-byte bandwidth budget as W2/W4 instead of the old
+byte-per-value layout). Packing along K keeps unpacking lane-local on TPU
+(see kernels/dequant_matmul).
 """
 from __future__ import annotations
 
@@ -25,8 +29,28 @@ def qmax_for_bits(bits: int) -> int:
     return 2 ** (bits - 1) - 1
 
 
-def values_per_byte(bits: int) -> int:
-    return {2: 4, 3: 1, 4: 2, 8: 1}[bits]
+def pack_layout(bits: int) -> tuple[int, int]:
+    """(bytes_per_group, values_per_group) of the K-packed byte layout.
+
+    A packed group is the smallest run of K rows that maps to a whole number
+    of bytes: bits*values_per_group == 8*bytes_per_group. For byte-aligned
+    widths (2/4/8) a group is one byte; 3-bit needs a 3-byte / 8-value group
+    (a 24-bit word)."""
+    return {2: (1, 4), 3: (3, 8), 4: (1, 2), 8: (1, 1)}[bits]
+
+
+def packed_rows(k: int, bits: int) -> int:
+    """Rows of the uint8 qw array holding k packed values."""
+    bpg, vpg = pack_layout(bits)
+    return -(-k // vpg) * bpg
+
+
+def unpacked_rows(pk: int, bits: int) -> int:
+    """Values held by pk packed uint8 rows (inverse of `packed_rows`,
+    up to end-of-K padding)."""
+    bpg, vpg = pack_layout(bits)
+    assert pk % bpg == 0, f"packed rows {pk} not a multiple of {bpg}"
+    return (pk // bpg) * vpg
 
 
 @jax.tree_util.register_pytree_node_class
@@ -97,28 +121,39 @@ def pack(q: jax.Array, bits: int) -> jax.Array:
     """Pack offset-binary values along K into uint8. q: int32 (K, N)."""
     k, n = q.shape
     qmax = qmax_for_bits(bits)
-    u = (q + qmax).astype(jnp.uint8)
-    vpb = values_per_byte(bits)
-    if vpb == 1:
-        return u
-    pad = (-k) % vpb
+    bpg, vpg = pack_layout(bits)
+    if (bpg, vpg) == (1, 1):
+        return (q + qmax).astype(jnp.uint8)
+    pad = (-k) % vpg
+    u = (q + qmax).astype(jnp.uint32)
     if pad:
-        u = jnp.concatenate([u, jnp.zeros((pad, n), jnp.uint8)], axis=0)
-    u = u.reshape(-1, vpb, n)
-    out = jnp.zeros((u.shape[0], n), jnp.uint8)
-    for i in range(vpb):
-        out = out | (u[:, i, :] << (bits * i))
-    return out
+        u = jnp.concatenate([u, jnp.zeros((pad, n), jnp.uint32)], axis=0)
+    u = u.reshape(-1, vpg, n)
+    word = jnp.zeros((u.shape[0], n), jnp.uint32)
+    for i in range(vpg):
+        word = word | (u[:, i, :] << (bits * i))
+    if bpg == 1:
+        return word.astype(jnp.uint8)
+    # multi-byte group (3-bit): emit the word little-endian along K
+    out = jnp.stack([(word >> (8 * b)) & 0xFF for b in range(bpg)], axis=1)
+    return out.reshape(-1, n).astype(jnp.uint8)
 
 
 def unpack(qw: jax.Array, bits: int, k: int) -> jax.Array:
     """Inverse of `pack`: returns int32 q in [-qmax, qmax], (K, N)."""
     qmax = qmax_for_bits(bits)
-    vpb = values_per_byte(bits)
-    if vpb == 1:
+    bpg, vpg = pack_layout(bits)
+    if (bpg, vpg) == (1, 1):
         return qw.astype(jnp.int32) - qmax
+    if bpg == 1:
+        word = qw
+    else:
+        grp = qw.astype(jnp.uint32).reshape(-1, bpg, qw.shape[1])
+        word = grp[:, 0, :]
+        for b in range(1, bpg):
+            word = word | (grp[:, b, :] << (8 * b))
     mask = (1 << bits) - 1
-    parts = [((qw >> (bits * i)) & mask) for i in range(vpb)]
+    parts = [((word >> (bits * i)) & mask) for i in range(vpg)]
     u = jnp.stack(parts, axis=1).reshape(-1, qw.shape[1])
     return u[:k].astype(jnp.int32) - qmax
 
@@ -242,14 +277,14 @@ def localize_quantized(params):
     — every consumer that derives dims from `qt.shape` (dequantize, kernel
     dispatch, reference matmuls) would then unpack garbage. The local K is
     recovered from the packed rows; `min` with the recorded K keeps
-    unsharded leaves exact when packing padded K up to a whole byte.
+    unsharded leaves exact when packing padded K up to a whole group.
     `group_size` is untouched: K sharding is only ever legal on whole-group
     boundaries (distributed/partitioning.py `_qt_serve_spec`)."""
 
     def fix(t):
         if not isinstance(t, QuantizedTensor):
             return t
-        k = min(t.shape[-2], t.qw.shape[-2] * values_per_byte(t.bits))
+        k = min(t.shape[-2], unpacked_rows(t.qw.shape[-2], t.bits))
         n = t.qw.shape[-1]
         if (k, n) == t.shape[-2:] and t.qw.shape[:-2] == t.shape[:-2]:
             return t

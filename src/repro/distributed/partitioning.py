@@ -13,7 +13,7 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
-from repro.core.quant.types import QuantizedTensor, values_per_byte
+from repro.core.quant.types import QuantizedTensor, pack_layout
 from repro.distributed.sharding import DEFAULT_RULES, _axis_size, spec_for
 from repro.models.config import ModelConfig
 
@@ -203,9 +203,11 @@ def _qt_serve_spec(qt: QuantizedTensor, wnames: tuple, mesh, rules):
     n_groups = qt.scale.shape[-2]
     if k_ax is not None and mesh is not None:
         tp = _axis_size(mesh, k_ax)
-        vpb = values_per_byte(qt.bits)
-        packed_ok = (qt.qw.shape[-2] % tp == 0
-                     and qt.shape[-2] % (tp * vpb) == 0)
+        bpg, vpg = pack_layout(qt.bits)
+        # each K shard must hold whole packed groups (bpg bytes / vpg
+        # values), so shard boundaries never split a multi-byte word
+        packed_ok = (qt.qw.shape[-2] % (tp * bpg) == 0
+                     and qt.shape[-2] % (tp * vpg) == 0)
         groups_ok = n_groups == 1 or n_groups % tp == 0
         if not (packed_ok and groups_ok):
             k_ax = None                      # drop jointly, keep consistency

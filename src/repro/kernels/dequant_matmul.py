@@ -2,10 +2,11 @@
 
 The deployment hot-spot of weight-only PTQ (the paper's serving story):
 y = x @ dequant(qw, scale). Packed uint8 weights stream HBM->VMEM at 1/2
-(W4) or 1/4 (W2) of bf16 bytes; nibbles are unpacked with lane-local
-shift/mask ops in VREGs (packing is along K, so no cross-lane movement —
-TPUs have no warp shuffles), scaled per group, and fed to the MXU as
-(bk, bn) bf16 tiles via `jnp.dot(..., preferred_element_type=f32)`.
+(W4), 3/16 (W3) or 1/4 (W2) of bf16 bytes; sub-byte fields are unpacked
+with lane-local shift/mask ops in VREGs (packing is along K, so no
+cross-lane movement — TPUs have no warp shuffles; W3 first reassembles its
+3-byte/8-value little-endian word), scaled per group, and fed to the MXU
+as (bk, bn) bf16 tiles via `jnp.dot(..., preferred_element_type=f32)`.
 
 Grid: (M/bm, N/bn, K/bk), K innermost; the f32 output tile accumulates
 across the K steps in VMEM.
@@ -18,21 +19,36 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.quant.types import qmax_for_bits, values_per_byte
+from repro.core.quant.types import pack_layout, qmax_for_bits
+
+
+def packed_tile_rows(bk: int, bits: int) -> int:
+    """uint8 rows of a packed tile holding bk values (bk % vpg == 0)."""
+    bpg, vpg = pack_layout(bits)
+    assert bk % vpg == 0, (bk, bits)
+    return bk // vpg * bpg
 
 
 def unpack_tile(qw: jax.Array, bits: int, bk: int) -> jax.Array:
-    """(bk/vpb, bn) packed uint8 tile -> (bk, bn) int32 values in
-    [-qmax, qmax]. Lane-local shift/mask unpack (packing is along K, rows
-    interleave as r*vpb+i), shared by every dequant-style kernel."""
-    vpb = values_per_byte(bits)
+    """(packed_tile_rows(bk), bn) packed uint8 tile -> (bk, bn) int32 values
+    in [-qmax, qmax]. Lane-local shift/mask unpack (packing is along K, rows
+    interleave as r*vpg+i), shared by every dequant-style kernel."""
+    bpg, vpg = pack_layout(bits)
     qmax = qmax_for_bits(bits)
     bn = qw.shape[-1]
-    if vpb == 1:
+    if (bpg, vpg) == (1, 1):
         u = qw
     else:
+        if bpg == 1:
+            word = qw
+        else:
+            # multi-byte group (W3): rebuild the little-endian word first
+            grp = qw.astype(jnp.uint32).reshape(bk // vpg, bpg, bn)
+            word = grp[:, 0, :]
+            for b in range(1, bpg):
+                word = word | (grp[:, b, :] << (8 * b))
         mask = (1 << bits) - 1
-        parts = [(qw >> (bits * i)) & mask for i in range(vpb)]
+        parts = [(word >> (bits * i)) & mask for i in range(vpg)]
         u = jnp.stack(parts, axis=1).reshape(bk, bn)
     return u.astype(jnp.int32) - qmax
 
@@ -82,16 +98,16 @@ def dequant_matmul_pallas(x: jax.Array, qw: jax.Array, scale: jax.Array, *,
                           bits: int, group_size: int, bm: int = 128,
                           bn: int = 128, bk: int = 256,
                           interpret: bool = False) -> jax.Array:
-    """x: (M, K); qw: (K/vpb, N) uint8; scale: (G, N). Returns (M, N) f32."""
+    """x: (M, K); qw: (packed_rows(K), N) uint8; scale: (G, N) -> (M, N) f32."""
     m, k = x.shape
     n = qw.shape[1]
     g = scale.shape[0]
-    vpb = values_per_byte(bits)
+    vpg = pack_layout(bits)[1]
     bm = min(bm, m)
     bk = min(bk, k)
     bn = min(bn, n)
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
-    assert bk % vpb == 0
+    assert bk % vpg == 0
 
     grid = (m // bm, n // bn, k // bk)
     kernel = functools.partial(_dequant_matmul_kernel, bits=bits,
@@ -101,7 +117,8 @@ def dequant_matmul_pallas(x: jax.Array, qw: jax.Array, scale: jax.Array, *,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk // vpb, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((packed_tile_rows(bk, bits), bn),
+                         lambda i, j, kk: (kk, j)),
             _scale_blockspec(group_size, k, g, bk, bn),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),

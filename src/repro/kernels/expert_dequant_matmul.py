@@ -1,7 +1,7 @@
 """Pallas TPU kernel: expert-batched fused low-bit dequantize + matmul.
 
 The MoE serving hot-spot: every expert's packed weight slab is consumed
-directly from the stacked (E, K/vpb, N) layout, so a quantized Mixtral/
+directly from the stacked (E, packed_rows(K), N) layout, so a quantized Mixtral/
 DeepSeek/Jamba MoE block never materializes a float (E, K, N) expert stack
 in HBM (the former `dequantize`-then-einsum path did exactly that, and at
 W4 the float stack is 4x the packed bytes).
@@ -21,9 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.quant.types import values_per_byte
-from repro.kernels.dequant_matmul import (_scale_blockspec, scale_tile,
-                                          unpack_tile)
+from repro.kernels.dequant_matmul import (_scale_blockspec, packed_tile_rows,
+                                          scale_tile, unpack_tile)
 
 
 def _expert_dequant_matmul_kernel(x_ref, qw_ref, scale_ref, o_ref, *,
@@ -57,17 +56,16 @@ def expert_dequant_matmul_pallas(x: jax.Array, qw: jax.Array,
                                  group_size: int, bm: int = 128,
                                  bn: int = 128, bk: int = 256,
                                  interpret: bool = False) -> jax.Array:
-    """x: (E, M, K); qw: (E, K/vpb, N) uint8; scale: (E, G, N).
+    """x: (E, M, K); qw: (E, packed_rows(K), N) uint8; scale: (E, G, N).
     Returns (E, M, N) f32."""
     e, m, k = x.shape
     n = qw.shape[-1]
     g = scale.shape[-2]
-    vpb = values_per_byte(bits)
     bm = min(bm, m)
     bk = min(bk, k)
     bn = min(bn, n)
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
-    assert bk % vpb == 0
+    pk = packed_tile_rows(bk, bits)
 
     grid = (e, m // bm, n // bn, k // bk)
     kernel = functools.partial(_expert_dequant_matmul_kernel, bits=bits,
@@ -77,7 +75,7 @@ def expert_dequant_matmul_pallas(x: jax.Array, qw: jax.Array,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bm, bk), lambda e_, i, j, kk: (e_, i, kk)),
-            pl.BlockSpec((1, bk // vpb, bn), lambda e_, i, j, kk: (e_, kk, j)),
+            pl.BlockSpec((1, pk, bn), lambda e_, i, j, kk: (e_, kk, j)),
             _expert_scale_blockspec(group_size, k, g, bk, bn),
         ],
         out_specs=pl.BlockSpec((1, bm, bn), lambda e_, i, j, kk: (e_, i, j)),

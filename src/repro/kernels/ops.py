@@ -19,8 +19,8 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant.types import (QuantizedTensor, quantize_activation,
-                                    values_per_byte)
+from repro.core.quant.types import (QuantizedTensor, pack_layout,
+                                    quantize_activation)
 from repro.kernels import ref
 from repro.kernels.channel_stats import channel_stats_pallas
 from repro.kernels.dequant_matmul import dequant_matmul_pallas
@@ -59,17 +59,18 @@ def _pick_block(dim: int, target: int) -> int:
     return b
 
 
-def _pick_bk(k: int, gs: int, vpb: int, target: int) -> int | None:
-    """K block size that divides K, packs whole bytes, and tiles the scale
-    groups (whole groups per block, or whole blocks per group). Returns
-    None when no such block exists — e.g. a group size with a large odd
-    factor — so callers can fall back to the jnp reference instead of
-    spinning this shrink loop down to a mod-by-zero."""
+def _pick_bk(k: int, gs: int, vpg: int, target: int) -> int | None:
+    """K block size that divides K, packs whole byte groups (vpg values per
+    `pack_layout` group), and tiles the scale groups (whole groups per
+    block, or whole blocks per group). Returns None when no such block
+    exists — e.g. a group size with a large odd factor — so callers can
+    fall back to the jnp reference instead of spinning this shrink loop
+    down to a mod-by-zero."""
     bk = _pick_block(k, target)
     while k % bk != 0 or (gs < bk and bk % gs != 0) or \
-            (gs >= bk and gs % bk != 0) or bk % vpb != 0:
+            (gs >= bk and gs % bk != 0) or bk % vpg != 0:
         bk //= 2  # halving can break K-divisibility; re-checked above
-        if bk < max(vpb, 1):
+        if bk < max(vpg, 1):
             return None
     return bk
 
@@ -88,9 +89,9 @@ def _plan_tiles(m: int, k: int, n: int, qt: QuantizedTensor,
     regime by token count, then concrete (bm, bn, bk) blocks. Returns None
     when K admits no valid block — callers fall back to the jnp ref."""
     gs = qt.group_size if qt.group_size != -1 else k
-    vpb = values_per_byte(qt.bits)
+    vpg = pack_layout(qt.bits)[1]
     bm, bn, bk = _matmul_blocks(m, bm, bn, bk)
-    bk_ = _pick_bk(k, gs, vpb, bk)
+    bk_ = _pick_bk(k, gs, vpg, bk)
     if bk_ is None:
         return None
     return _pick_block(max(m, 8), bm), _pick_block(n, bn), bk_
@@ -210,6 +211,39 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     return o.reshape(s, h, v_pool.shape[-1]).astype(out_dtype or q.dtype)
 
 
+def paged_attention_verify(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_table: jax.Array,
+                           kv_len: jax.Array, *, k_scale_pool=None,
+                           v_scale_pool=None, window=None,
+                           out_dtype=None) -> jax.Array:
+    """Fused verify read for self-speculative decoding: q (S, M, H, hd) —
+    the M draft-proposed tail tokens of each slot — against the slot's
+    pages, with per-row causal fill masks (row m attends through position
+    kv_len - M + m). kv_len counts the fill *including* all M tokens.
+    Returns (S, M, H, hd_v). One page walk serves all M rows, so the
+    verify forward streams each live KV tile once instead of M times.
+    M == 1 is exactly the decode read (`paged_attention`)."""
+    s, m, h, hd = q.shape
+    kvh = k_pool.shape[2]
+    g = h // kvh
+    # rows go m-major within each kv head: (S, KVH, M*G, hd)
+    qg = q.reshape(s, m, kvh, g, hd).transpose(0, 2, 1, 3, 4)
+    qg = qg.reshape(s, kvh, m * g, hd)
+    tile = _paged_tile(k_pool.shape[1])
+    if _interpret() and os.environ.get("REPRO_DEQUANT_IMPL") != "pallas":
+        o = ref.paged_attention_ref(qg, k_pool, v_pool, block_table, kv_len,
+                                    k_scale_pool, v_scale_pool,
+                                    window=window, tile=tile, m_rows=m)
+    else:
+        o = paged_attention_pallas(qg, k_pool, v_pool, block_table, kv_len,
+                                   k_scale_pool, v_scale_pool, window=window,
+                                   tile=tile, m_rows=m,
+                                   interpret=_interpret())
+    hd_v = v_pool.shape[-1]
+    o = o.reshape(s, kvh, m, g, hd_v).transpose(0, 2, 1, 3, 4)
+    return o.reshape(s, m, h, hd_v).astype(out_dtype or q.dtype)
+
+
 def channel_stats(x: jax.Array):
     """x: (..., C) -> per-channel (mean, var)."""
     x2 = x.reshape(-1, x.shape[-1])
@@ -227,8 +261,8 @@ def quantize_pack(w: jax.Array, scale: jax.Array, *, bits: int,
     if _interpret() and os.environ.get("REPRO_DEQUANT_IMPL") != "pallas":
         return ref.quantize_pack_ref(w, scale, bits=bits)
     gs = group_size if group_size != -1 else k
-    vpb = values_per_byte(bits)
-    bk = _pick_bk(k, gs, vpb, 256)
+    vpg = pack_layout(bits)[1]
+    bk = _pick_bk(k, gs, vpg, 256)
     if bk is None:  # no valid tiling (e.g. group_size with odd factors)
         return ref.quantize_pack_ref(w, scale, bits=bits)
     bn = _pick_block(n, 256)

@@ -19,6 +19,15 @@ Grid: ``(S, KVH, W * tiles_per_page)``, the page-walk axis innermost so the
 table and fill counts are scalar-prefetched (``PrefetchScalarGridSpec``) so
 index maps can chase page indices before each tile's DMA is issued.
 
+Verify regime (``m_rows > 1``): self-speculative decoding verifies the
+draft's last ``m_rows`` tokens of a slot in one read. The query block grows
+to ``m_rows * G`` rows, laid out m-major (row r belongs to verify token
+``r // G``, which sits at fill position ``kv_len - m_rows + r // G``), and
+the causal/window masks become per-row fill limits. One page walk serves
+all ``m_rows`` tokens, so a verify step streams each live KV tile once
+instead of ``m_rows`` times. ``m_rows == 1`` reduces exactly to the decode
+read — same masks, same accumulator updates, bit-identical output.
+
 Numerics mirror ``kernels/ref.paged_attention_ref`` op-for-op (same walk
 order, same f32 accumulation) so interpret-mode runs are bit-comparable
 with the jnp reference on CPU.
@@ -52,43 +61,49 @@ def _tile_coords(t: jax.Array, *, page_size: int, tile: int):
 
 
 def _tile_live(s, t, bt, kl, *, page_size: int, tile: int,
-               window: Optional[int]):
+               window: Optional[int], m_rows: int = 1):
     """Does grid step t hold any live (unmasked) token for slot s?
 
     Dead tiles are skipped entirely: beyond the fill count, on an unheld
     block-table entry (-1), or — with sliding-window attention — wholly
     behind the window. This predicate is shared by the index maps (route
     the DMA to the scratch page) and the kernel body (skip the compute).
+
+    With ``m_rows`` verify rows the earliest row's window starts at
+    ``kl - (m_rows - 1) - window``, so the SWA liveness bound loosens by
+    exactly ``m_rows - 1`` tokens (rows that reach further back than a
+    given tile mask it per-row inside the kernel).
     """
     w, _, base = _tile_coords(t, page_size=page_size, tile=tile)
     live = (base < kl[s]) & (bt[s, w] >= 0)
     if window is not None:
-        live &= (base + tile) > (kl[s] - window)
+        live &= (base + tile) > (kl[s] - (m_rows - 1) - window)
     return live
 
 
 def _page_map(s, h, t, bt, kl, *, page_size: int, tile: int,
-              window: Optional[int]):
+              window: Optional[int], m_rows: int = 1):
     """Block index of the K/V page tile for grid cell (s, h, t)."""
     w, sub, _ = _tile_coords(t, page_size=page_size, tile=tile)
     live = _tile_live(s, t, bt, kl, page_size=page_size, tile=tile,
-                      window=window)
+                      window=window, m_rows=m_rows)
     page = jnp.where(live, jnp.maximum(bt[s, w], 0), 0)
     return page, sub, h, 0
 
 
 def _scale_map(s, h, t, bt, kl, *, page_size: int, tile: int,
-               window: Optional[int]):
+               window: Optional[int], m_rows: int = 1):
     w, sub, _ = _tile_coords(t, page_size=page_size, tile=tile)
     live = _tile_live(s, t, bt, kl, page_size=page_size, tile=tile,
-                      window=window)
+                      window=window, m_rows=m_rows)
     page = jnp.where(live, jnp.maximum(bt[s, w], 0), 0)
     return page, sub, h
 
 
 def _paged_attn_kernel(bt_ref, kl_ref, q_ref, k_ref, v_ref, *rest,
                        page_size: int, tile: int, window: Optional[int],
-                       quant: bool, sm_scale: float, n_steps: int):
+                       m_rows: int, quant: bool, sm_scale: float,
+                       n_steps: int):
     if quant:
         ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
     else:
@@ -98,7 +113,7 @@ def _paged_attn_kernel(bt_ref, kl_ref, q_ref, k_ref, v_ref, *rest,
     kl = kl_ref[s_i]
     _, _, base = _tile_coords(t_i, page_size=page_size, tile=tile)
     live = _tile_live(s_i, t_i, bt_ref, kl_ref, page_size=page_size,
-                      tile=tile, window=window)
+                      tile=tile, window=window, m_rows=m_rows)
 
     @pl.when(t_i == 0)
     def _init():
@@ -108,7 +123,7 @@ def _paged_attn_kernel(bt_ref, kl_ref, q_ref, k_ref, v_ref, *rest,
 
     @pl.when(live)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
+        q = q_ref[0, 0].astype(jnp.float32)                  # (R, hd)
         k = k_ref[0, :, 0, :]                                # (tile, hd)
         v = v_ref[0, :, 0, :]                                # (tile, hd_v)
         if quant:
@@ -119,16 +134,29 @@ def _paged_attn_kernel(bt_ref, kl_ref, q_ref, k_ref, v_ref, *rest,
             vf = v.astype(jnp.float32)
         s = jax.lax.dot_general(q, kf, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
-        s = s * sm_scale                                     # (G, tile)
+        s = s * sm_scale                                     # (R, tile)
         pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
-        valid = pos < kl
+        rows = q.shape[0]                                    # R = m_rows * G
+        g = rows // m_rows
+        # row r verifies the token at fill position kl - m_rows + r//g, so
+        # its causal limit is kl - (m_rows - 1 - r//g); at m_rows == 1 this
+        # is the scalar kl of the decode read
+        r = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
+        lim = kl - (m_rows - 1 - r // g)
+        valid = pos < lim
         if window is not None:
-            valid &= pos > (kl - 1 - window)
+            valid &= pos > (lim - 1 - window)
         s = jnp.where(valid, s, NEG)
-        m_prev = m_scr[...]                                  # (G, 1)
+        m_prev = m_scr[...]                                  # (R, 1)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
         corr = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new)                               # (G, tile)
+        p = jnp.exp(s - m_new)                               # (R, tile)
+        # a live tile can sit wholly outside an *early* row's reach
+        # (m_rows > 1); that row's m_new is still NEG there, making
+        # exp(NEG - NEG) garbage — zero masked columns explicitly. At
+        # m_rows == 1 every live tile has a valid column, m_new > NEG, and
+        # masked columns underflow to exactly 0.0 anyway: bit-identical.
+        p = jnp.where(valid, p, 0.0)
         l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
         acc_scr[...] = acc_scr[...] * corr + jnp.dot(
             p, vf, preferred_element_type=jnp.float32)
@@ -141,18 +169,23 @@ def _paged_attn_kernel(bt_ref, kl_ref, q_ref, k_ref, v_ref, *rest,
         o_ref[0, 0] = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("window", "tile", "m_rows",
+                                             "interpret"))
 def paged_attention_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                            block_table: jax.Array, kv_len: jax.Array,
                            k_scale_pool: Optional[jax.Array] = None,
                            v_scale_pool: Optional[jax.Array] = None, *,
                            window: Optional[int] = None, tile: int = 0,
+                           m_rows: int = 1,
                            interpret: bool = False) -> jax.Array:
-    """q: (S, KVH, G, hd); pools: (P, page, KVH, hd[/hd_v]); block_table:
-    (S, W) page ids (-1 = unheld); kv_len: (S,) fill counts *including* the
-    current token (q sits at position kv_len-1). Scale pools (P, page, KVH)
-    mark int8 pools. Returns (S, KVH, G, hd_v) f32."""
-    s, kvh, g, hd = q.shape
+    """q: (S, KVH, m_rows*G, hd) m-major rows; pools: (P, page, KVH,
+    hd[/hd_v]); block_table: (S, W) page ids (-1 = unheld); kv_len: (S,)
+    fill counts *including* all m_rows verify tokens (row m sits at
+    position kv_len - m_rows + m; at m_rows == 1 q is the current token at
+    kv_len - 1). Scale pools (P, page, KVH) mark int8 pools. Returns
+    (S, KVH, m_rows*G, hd_v) f32."""
+    s, kvh, rows, hd = q.shape
+    assert rows % m_rows == 0, (rows, m_rows)
     page_size = k_pool.shape[1]
     hd_v = v_pool.shape[-1]
     w = block_table.shape[1]
@@ -161,10 +194,12 @@ def paged_attention_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     quant = k_scale_pool is not None
     n_steps = w * (page_size // tile)
     sm_scale = 1.0 / (hd ** 0.5)
-    geom = dict(page_size=page_size, tile=tile, window=window)
+    geom = dict(page_size=page_size, tile=tile, window=window,
+                m_rows=m_rows)
 
     in_specs = [
-        pl.BlockSpec((1, 1, g, hd), lambda s_, h_, t_, bt, kl: (s_, h_, 0, 0)),
+        pl.BlockSpec((1, 1, rows, hd),
+                     lambda s_, h_, t_, bt, kl: (s_, h_, 0, 0)),
         pl.BlockSpec((1, tile, 1, hd), functools.partial(_page_map, **geom)),
         pl.BlockSpec((1, tile, 1, hd_v), functools.partial(_page_map, **geom)),
     ]
@@ -181,12 +216,12 @@ def paged_attention_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         num_scalar_prefetch=2,
         grid=(s, kvh, n_steps),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, g, hd_v),
+        out_specs=pl.BlockSpec((1, 1, rows, hd_v),
                                lambda s_, h_, t_, bt, kl: (s_, h_, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((g, 1), jnp.float32),      # running max
-            pltpu.VMEM((g, 1), jnp.float32),      # running denominator
-            pltpu.VMEM((g, hd_v), jnp.float32),   # output accumulator
+            pltpu.VMEM((rows, 1), jnp.float32),      # running max
+            pltpu.VMEM((rows, 1), jnp.float32),      # running denominator
+            pltpu.VMEM((rows, hd_v), jnp.float32),   # output accumulator
         ],
     )
     kernel = functools.partial(_paged_attn_kernel, quant=quant,
@@ -194,6 +229,6 @@ def paged_attention_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((s, kvh, g, hd_v), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((s, kvh, rows, hd_v), jnp.float32),
         interpret=interpret,
     )(block_table.astype(jnp.int32), kv_len.astype(jnp.int32), *args)

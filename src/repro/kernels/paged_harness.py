@@ -46,6 +46,41 @@ def build_paged_case(seed: int, s: int, w: int, ps: int, kvh: int, g: int,
     return q, pools, jnp.asarray(bt), jnp.asarray(fills, dtype=jnp.int32)
 
 
+def build_verify_case(seed: int, s: int, m: int, w: int, ps: int, kvh: int,
+                      g: int, hd: int, fills, kv_bits: int):
+    """Verify-shaped variant of `build_paged_case`: q gets M query rows per
+    slot (the spec-decode verify tail; row r of slot si sits at fill
+    position fills[si] - m + r). Fills must be 0 (idle slot) or >= m.
+    Returns (q (S, M, H, hd), pools, block_table, kv_len)."""
+    assert all(f == 0 or f >= m for f in fills), fills
+    _, pools, bt, kv_len = build_paged_case(seed, s, w, ps, kvh, g, hd,
+                                            fills, kv_bits)
+    rng = np.random.default_rng(seed + 1)
+    q = jnp.asarray(rng.normal(size=(s, m, kvh * g, hd)), jnp.float32)
+    return q, pools, bt, kv_len
+
+
+def verify_oracle(q: jax.Array, pools: dict, bt: jax.Array,
+                  kv_len: jax.Array, window: Optional[int]) -> jax.Array:
+    """Gather-based oracle for the verify read: dense attention with the
+    per-row causal positions kv_len - M + [0..M). Garbage rows for slots
+    with fill < M (all-masked softmax); the kernel defines those as exact
+    zeros — compare live slots only."""
+    m = q.shape[1]
+    if pools["k_scale_pool"] is not None:
+        kg = _dequant_kv(gather_pages(pools["k_pool"], bt),
+                         gather_pages(pools["k_scale_pool"], bt), q.dtype)
+        vg = _dequant_kv(gather_pages(pools["v_pool"], bt),
+                         gather_pages(pools["v_scale_pool"], bt), q.dtype)
+    else:
+        kg = gather_pages(pools["k_pool"], bt)
+        vg = gather_pages(pools["v_pool"], bt)
+    kv_pos = contiguous_positions(kv_len, kg.shape[1])
+    q_pos = (kv_len[:, None] - m + jnp.arange(m, dtype=jnp.int32)[None, :])
+    return attention_core(q, kg, vg, q_pos=q_pos, kv_pos=kv_pos,
+                          causal=True, window=window, block_kv=1 << 30)
+
+
 def gather_oracle(q: jax.Array, pools: dict, bt: jax.Array,
                   kv_len: jax.Array, window: Optional[int]) -> jax.Array:
     """The PR-1 decode read: gather pages contiguous, dequant, dense einsum

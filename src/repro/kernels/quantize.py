@@ -1,7 +1,8 @@
 """Pallas TPU kernel: RTN quantize + pack (offline/deploy-time path).
 
-Rounds a (K, N) float weight tile to the symmetric grid and packs `vpb`
-offset-binary values per byte along K, writing (bk/vpb, bn) uint8 tiles.
+Rounds a (K, N) float weight tile to the symmetric grid and packs
+offset-binary values along K in `pack_layout(bits)` groups (one byte for
+2/4/8-bit, a 3-byte/8-value word for 3-bit), writing packed uint8 tiles.
 Keeps the whole quantize->pack in VMEM (no int staging in HBM).
 """
 from __future__ import annotations
@@ -12,8 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.quant.types import qmax_for_bits, values_per_byte
-from repro.kernels.dequant_matmul import _scale_blockspec
+from repro.core.quant.types import pack_layout, qmax_for_bits
+from repro.kernels.dequant_matmul import _scale_blockspec, packed_tile_rows
 
 
 def _quantize_kernel(w_ref, scale_ref, o_ref, *, bits: int, bk: int):
@@ -23,16 +24,21 @@ def _quantize_kernel(w_ref, scale_ref, o_ref, *, bits: int, bk: int):
     qmax = qmax_for_bits(bits)
     ws = (w.reshape(gb, bk // gb, bn) / s[:, None, :]).reshape(bk, bn)
     q = jnp.clip(jnp.round(ws), -qmax, qmax).astype(jnp.int32)
-    u = (q + qmax).astype(jnp.uint8)
-    vpb = values_per_byte(bits)
-    if vpb == 1:
-        o_ref[...] = u
+    bpg, vpg = pack_layout(bits)
+    if (bpg, vpg) == (1, 1):
+        o_ref[...] = (q + qmax).astype(jnp.uint8)
+        return
+    u = (q + qmax).astype(jnp.uint32).reshape(bk // vpg, vpg, bn)
+    word = jnp.zeros((bk // vpg, bn), jnp.uint32)
+    for i in range(vpg):
+        word = word | (u[:, i, :] << (bits * i))
+    if bpg == 1:
+        o_ref[...] = word.astype(jnp.uint8)
     else:
-        u = u.reshape(bk // vpb, vpb, bn)
-        acc = jnp.zeros((bk // vpb, bn), jnp.uint8)
-        for i in range(vpb):
-            acc = acc | (u[:, i, :] << (bits * i))
-        o_ref[...] = acc
+        # multi-byte group (W3): emit the word little-endian along K
+        out = jnp.stack([(word >> (8 * b)) & 0xFF for b in range(bpg)],
+                        axis=1)
+        o_ref[...] = out.reshape(bk // vpg * bpg, bn).astype(jnp.uint8)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "group_size", "bk", "bn",
@@ -40,13 +46,13 @@ def _quantize_kernel(w_ref, scale_ref, o_ref, *, bits: int, bk: int):
 def quantize_pack_pallas(w: jax.Array, scale: jax.Array, *, bits: int,
                          group_size: int, bk: int = 256, bn: int = 256,
                          interpret: bool = False) -> jax.Array:
-    """w: (K, N); scale: (G, N). Returns packed uint8 (K/vpb, N)."""
+    """w: (K, N); scale: (G, N). Returns packed uint8 (packed_rows(K), N)."""
     k, n = w.shape
     g = scale.shape[0]
-    vpb = values_per_byte(bits)
+    vpg = pack_layout(bits)[1]
     bk = min(bk, k)
     bn = min(bn, n)
-    assert k % bk == 0 and n % bn == 0 and bk % vpb == 0
+    assert k % bk == 0 and n % bn == 0 and bk % vpg == 0
 
     # reuse the dequant scale indexing, adding a dummy leading grid dim
     sspec = _scale_blockspec(group_size, k, g, bk, bn)
@@ -58,7 +64,9 @@ def quantize_pack_pallas(w: jax.Array, scale: jax.Array, *, bits: int,
         kernel,
         grid=(k // bk, n // bn),
         in_specs=[pl.BlockSpec((bk, bn), lambda kk, j: (kk, j)), sspec2],
-        out_specs=pl.BlockSpec((bk // vpb, bn), lambda kk, j: (kk, j)),
-        out_shape=jax.ShapeDtypeStruct((k // vpb, n), jnp.uint8),
+        out_specs=pl.BlockSpec((packed_tile_rows(bk, bits), bn),
+                               lambda kk, j: (kk, j)),
+        out_shape=jax.ShapeDtypeStruct((packed_tile_rows(k, bits), n),
+                                       jnp.uint8),
         interpret=interpret,
     )(w, scale.astype(jnp.float32))

@@ -21,7 +21,8 @@ def dequant_matmul_ref(x: jax.Array, qw: jax.Array, scale: jax.Array, *,
 def expert_dequant_matmul_ref(x: jax.Array, qw: jax.Array, scale: jax.Array,
                               *, bits: int, group_size: int,
                               k: int) -> jax.Array:
-    """x: (E, M, K) @ packed (E, K/vpb, N) -> (E, M, N) f32."""
+    """x: (E, M, K) @ packed (E, pk, N) -> (E, M, N) f32 (pk = packed
+    rows, see types.pack_layout)."""
     e = x.shape[0]
     qt = QuantizedTensor(qw, scale, bits, group_size, (e, k, qw.shape[-1]))
     w = dequantize(qt, jnp.float32)
@@ -33,7 +34,8 @@ def expert_dequant_matmul_ref(x: jax.Array, qw: jax.Array, scale: jax.Array,
 def w8a8_matmul_ref(xq: jax.Array, qw: jax.Array, scale: jax.Array, *,
                     bits: int, group_size: int, k: int) -> jax.Array:
     """Exact int32 oracle for the W8A8 kernel (pre activation-rescale).
-    xq: (M, K) int8; qw: (K/vpb, N); scale: (G, N). Returns (M, N) f32."""
+    xq: (M, K) int8; qw: (pk, N) packed rows; scale: (G, N). Returns
+    (M, N) f32."""
     m = xq.shape[0]
     n = qw.shape[1]
     q = unpack(qw, bits, k)                            # (K, N) int32
@@ -51,16 +53,20 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                         k_scale_pool: Optional[jax.Array] = None,
                         v_scale_pool: Optional[jax.Array] = None, *,
                         window: Optional[int] = None,
-                        tile: int = 0) -> jax.Array:
+                        tile: int = 0, m_rows: int = 1) -> jax.Array:
     """jnp mirror of kernels/paged_attention.py — same page-walk order, same
     per-tile online-softmax updates, same f32 accumulation, so interpret-mode
     kernel runs are bit-comparable on CPU. Dead tiles (beyond fill, unheld
     pages, wholly behind the sliding window) leave the accumulators
     untouched, exactly like the kernel's ``pl.when`` skip.
 
-    q: (S, KVH, G, hd); pools: (P, page, KVH, hd[/hd_v]); block_table:
-    (S, W); kv_len: (S,). Returns (S, KVH, G, hd_v) f32."""
-    s, kvh, g, hd = q.shape
+    q: (S, KVH, m_rows*G, hd) m-major rows (verify regime: row r belongs to
+    the token at fill position kv_len - m_rows + r//G; decode is
+    m_rows == 1); pools: (P, page, KVH, hd[/hd_v]); block_table: (S, W);
+    kv_len: (S,). Returns (S, KVH, m_rows*G, hd_v) f32."""
+    s, kvh, rows, hd = q.shape
+    assert rows % m_rows == 0, (rows, m_rows)
+    g = rows // m_rows
     page_size = k_pool.shape[1]
     hd_v = v_pool.shape[-1]
     w = block_table.shape[1]
@@ -74,7 +80,7 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
 
     def cell(qgh, bt_row, kl, h_idx):
         """One (slot, kv-head) grid cell: walk the row's page tiles."""
-        qf = qgh.astype(jnp.float32)                         # (G, hd)
+        qf = qgh.astype(jnp.float32)                         # (R, hd)
 
         def step(carry, t):
             m, l, acc = carry
@@ -82,7 +88,7 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                 (t % nt) * tile
             live = (base < kl) & (bt_row[wi] >= 0)
             if window is not None:
-                live &= (base + tile) > (kl - window)
+                live &= (base + tile) > (kl - (m_rows - 1) - window)
             page = jnp.where(live, jnp.maximum(bt_row[wi], 0), 0)
             k = jax.lax.dynamic_slice(
                 k_pool, (page, sub * tile, h_idx, 0),
@@ -104,24 +110,28 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                 vf = v.astype(jnp.float32)
             sc = jax.lax.dot_general(qf, kf, (((1,), (1,)), ((), ())),
                                      preferred_element_type=jnp.float32)
-            sc = sc * sm_scale                               # (G, tile)
+            sc = sc * sm_scale                               # (R, tile)
             pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
-            valid = pos < kl
+            # per-row causal fill limit (scalar kl at m_rows == 1)
+            r = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
+            lim = kl - (m_rows - 1 - r // g)
+            valid = pos < lim
             if window is not None:
-                valid &= pos > (kl - 1 - window)
+                valid &= pos > (lim - 1 - window)
             sc = jnp.where(valid, sc, neg)
             m_new = jnp.maximum(m, jnp.max(sc, axis=-1, keepdims=True))
             corr = jnp.exp(m - m_new)
             p = jnp.exp(sc - m_new)
+            p = jnp.where(valid, p, 0.0)
             l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
             acc_new = acc * corr + jnp.dot(p, vf,
                                            preferred_element_type=jnp.float32)
             keep = lambda new, old: jnp.where(live, new, old)
             return (keep(m_new, m), keep(l_new, l), keep(acc_new, acc)), None
 
-        init = (jnp.full((g, 1), neg, jnp.float32),
-                jnp.zeros((g, 1), jnp.float32),
-                jnp.zeros((g, hd_v), jnp.float32))
+        init = (jnp.full((rows, 1), neg, jnp.float32),
+                jnp.zeros((rows, 1), jnp.float32),
+                jnp.zeros((rows, hd_v), jnp.float32))
         (m, l, acc), _ = jax.lax.scan(step, init,
                                       jnp.arange(n_steps, dtype=jnp.int32))
         return acc / jnp.maximum(l, 1e-30)

@@ -9,7 +9,7 @@ the weight scale and accumulated in an f32 VMEM tile; the per-token
 activation scale is a rank-1 rescale applied by the caller (kernels/ops.py)
 so the kernel's operands stay MXU-shaped int8/uint8 tiles.
 
-Works for any packed bits in {2, 4, 8}: the unpacked values always fit
+Works for any packed bits in {2, 3, 4, 8}: the unpacked values always fit
 int8 (|q| <= 127), so W4A8 — the regime FPTQ shows is the practical
 sweet spot — uses the exact same kernel as W8A8.
 
@@ -23,8 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.quant.types import values_per_byte
-from repro.kernels.dequant_matmul import _scale_blockspec, unpack_tile
+from repro.kernels.dequant_matmul import (_scale_blockspec, packed_tile_rows,
+                                          unpack_tile)
 
 
 def _w8a8_matmul_kernel(x_ref, qw_ref, scale_ref, o_ref, *, bits: int,
@@ -57,17 +57,16 @@ def w8a8_matmul_pallas(xq: jax.Array, qw: jax.Array, scale: jax.Array, *,
                        bits: int, group_size: int, bm: int = 128,
                        bn: int = 128, bk: int = 256,
                        interpret: bool = False) -> jax.Array:
-    """xq: (M, K) int8; qw: (K/vpb, N) uint8; scale: (G, N).
+    """xq: (M, K) int8; qw: (packed_rows(K), N) uint8; scale: (G, N).
     Returns (M, N) f32 — *before* the per-token activation rescale."""
     m, k = xq.shape
     n = qw.shape[1]
     g = scale.shape[0]
-    vpb = values_per_byte(bits)
     bm = min(bm, m)
     bk = min(bk, k)
     bn = min(bn, n)
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
-    assert bk % vpb == 0
+    pk = packed_tile_rows(bk, bits)
     # every K-block must hold whole scale groups: the int32 accumulator is
     # rescaled group-by-group inside the block
     gs = group_size if group_size != -1 else k
@@ -80,7 +79,7 @@ def w8a8_matmul_pallas(xq: jax.Array, qw: jax.Array, scale: jax.Array, *,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk // vpb, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((pk, bn), lambda i, j, kk: (kk, j)),
             _scale_blockspec(group_size, k, g, bk, bn),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),

@@ -6,7 +6,12 @@ throughput and per-request latency percentiles.
         --bits 4 --method gptq --requests 16 --rate 8.0
 
 `--no-smoke` runs the full-size config. `--engine static` runs the old
-static-batch engine on the same workload for comparison.
+static-batch engine on the same workload for comparison. `--spec-decode`
+(float checkpoints, `--method none`) turns on self-speculative decoding:
+a packed W2/W3 draft of the same params proposes `--spec-k` tokens per
+round, the target verifies in one forward — greedy output stays
+bit-identical to target-only decode, and the summary reports the
+acceptance counters.
 """
 from __future__ import annotations
 
@@ -81,7 +86,8 @@ def run_continuous(cfg, params, work, args):
                            paged_attn=args.paged_attn,
                            prefix_share=args.prefix_share,
                            chunked_prefill=args.chunked_prefill,
-                           tp=args.tp)
+                           tp=args.tp, spec_decode=args.spec_decode,
+                           draft_bits=args.draft_bits, spec_k=args.spec_k)
     if args.tp > 1:
         rep = eng.tp_placement_report()
         print(f"tensor-parallel x{args.tp}: params "
@@ -117,6 +123,10 @@ def run_continuous(cfg, params, work, args):
     # behaviour reflect measured traffic alone
     eng.n_decode_steps = eng.n_prefills = 0
     eng.n_prefill_tokens = eng.n_shared_tokens = 0
+    if args.spec_decode:
+        eng.n_spec_rounds = eng.n_draft_tokens = eng.n_spec_emitted = 0
+        eng.spec_accept_sum[:] = 0
+        eng.spec_round_count[:] = 0
     eng.pool.clear_prefix_cache()
 
     for prompt, max_new, arrival in work:
@@ -136,6 +146,14 @@ def run_continuous(cfg, params, work, args):
     print(f"  latency  p50 {_pct(lat, 50):.3f}s  p90 {_pct(lat, 90):.3f}s  "
           f"p99 {_pct(lat, 99):.3f}s")
     print(f"  ttft     p50 {_pct(ttft, 50):.3f}s  p99 {_pct(ttft, 99):.3f}s")
+    if args.spec_decode:
+        st = eng.spec_stats()
+        print(f"  spec     {st['rounds']} rounds, {st['draft_tokens']} draft "
+              f"tokens proposed, {st['accepted_draft_tokens']} accepted "
+              f"(rate {st['acceptance_rate']:.3f})")
+        print(f"  accepted len  mean {st['mean_accepted_len']:.2f} "
+              f"tokens/slot-round, per slot "
+              f"{st['per_slot_mean_accepted_len']}")
     print("request 0:", done[0].tokens)
 
 
@@ -199,6 +217,15 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a common system prompt of this many "
                          "tokens to every request")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="self-speculative decoding: a truly-packed W2/W3 "
+                         "draft of the same checkpoint proposes, the target "
+                         "verifies (greedy output bit-identical to "
+                         "target-only decode)")
+    ap.add_argument("--draft-bits", type=int, default=2, choices=(2, 3),
+                    help="draft weight width (packed sub-byte)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft proposals per verify round")
     ap.add_argument("--prompt-len-min", type=int, default=8)
     ap.add_argument("--prompt-len-max", type=int, default=64)
     ap.add_argument("--max-new-min", type=int, default=8)
@@ -214,6 +241,15 @@ def main():
         # timing a differently-configured engine in a "comparison"
         raise SystemExit("--tp applies to the continuous engine only "
                          "(use --engine continuous)")
+    if args.spec_decode and args.method != "none":
+        # the normtweak pipeline hands back pre-packed QuantizedTensor
+        # leaves; the engine quantizes its own draft from the float
+        # checkpoint and refuses packed trees
+        raise SystemExit("--spec-decode quantizes its own low-bit draft "
+                         "from the float checkpoint; use --method none")
+    if args.spec_decode and args.engine != "continuous":
+        raise SystemExit("--spec-decode applies to the continuous engine "
+                         "only (use --engine continuous)")
     n_dev = len(jax.devices())
     # with --tp the continuous engine owns placement (it builds a 1-D
     # ("model",) mesh and device_puts weights + KV pools itself), so the

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import TP_AXIS, lc
-from repro.kernels.ops import paged_attention
+from repro.kernels.ops import paged_attention, paged_attention_verify
 from repro.models.config import ModelConfig
 from repro.models.linear import dense, init_dense
 from repro.models.rope import apply_rope
@@ -241,20 +241,7 @@ def _paged_update(cache: dict, k, v, positions, paged: dict):
     quant = "k_scale_pool" in cache
     if "bt_rows" in paged:                          # prefill (batch of slots)
         bt = paged["bt_rows"]
-        ps = cache["k_pool"].shape[1]
-        pages, offs = prefill_page_index(bt, positions, ps)
-        if quant:
-            kq, ks = _quant_kv(k)
-            vq, vs = _quant_kv(v)
-            new["k_pool"] = cache["k_pool"].at[pages, offs].set(kq)
-            new["v_pool"] = cache["v_pool"].at[pages, offs].set(vq)
-            new["k_scale_pool"] = cache["k_scale_pool"].at[pages, offs].set(ks)
-            new["v_scale_pool"] = cache["v_scale_pool"].at[pages, offs].set(vs)
-        else:
-            new["k_pool"] = cache["k_pool"].at[pages, offs].set(
-                k.astype(cache["k_pool"].dtype))
-            new["v_pool"] = cache["v_pool"].at[pages, offs].set(
-                v.astype(cache["v_pool"].dtype))
+        new = _paged_write_prefill(cache, k, v, positions, bt)
         if "kv_len" not in paged:           # fresh full prompt: self-attend
             return new, (k, v, positions)
         if quant:
@@ -280,6 +267,28 @@ def _paged_update(cache: dict, k, v, positions, paged: dict):
         vg = gather_pages(new["v_pool"], bt)
     kv_pos = contiguous_positions(paged["kv_len"], kg.shape[1])
     return new, (kg, vg, kv_pos)
+
+
+def _paged_write_prefill(cache: dict, k, v, positions, bt) -> dict:
+    """Scatter a (B, S) batch of tokens at their block-table page slots
+    (negative positions route to the reserved scratch page). Shared by the
+    paged prefill path and the spec-decode verify write."""
+    ps = cache["k_pool"].shape[1]
+    pages, offs = prefill_page_index(bt, positions, ps)
+    new = dict(cache)
+    if "k_scale_pool" in cache:
+        kq, ks = _quant_kv(k)
+        vq, vs = _quant_kv(v)
+        new["k_pool"] = cache["k_pool"].at[pages, offs].set(kq)
+        new["v_pool"] = cache["v_pool"].at[pages, offs].set(vq)
+        new["k_scale_pool"] = cache["k_scale_pool"].at[pages, offs].set(ks)
+        new["v_scale_pool"] = cache["v_scale_pool"].at[pages, offs].set(vs)
+    else:
+        new["k_pool"] = cache["k_pool"].at[pages, offs].set(
+            k.astype(cache["k_pool"].dtype))
+        new["v_pool"] = cache["v_pool"].at[pages, offs].set(
+            v.astype(cache["v_pool"].dtype))
+    return new
 
 
 def _paged_write_decode(cache: dict, k, v, paged: dict) -> dict:
@@ -404,6 +413,22 @@ def apply_attention(cfg: ModelConfig, p: dict, x: jax.Array, *,
                 k_scale_pool=new_cache.get("k_scale_pool"),
                 v_scale_pool=new_cache.get("v_scale_pool"),
                 window=window, out_dtype=q.dtype)[:, None]
+        elif (cache is not None and "k_pool" in cache
+                and paged is not None and "verify" in paged
+                and cfg.paged_attn_impl == "fused"):
+            # spec-decode verify: scatter the s tail tokens with the prefill
+            # scatter (inactive slots carry positions < 0 and route to the
+            # scratch page), then read all s rows in one fused page walk
+            # with per-row causal fill masks — each live KV tile streams
+            # once for the whole verify batch
+            new_cache = _paged_write_prefill(cache, k, v, kpos,
+                                             paged["bt_rows"])
+            fused_o = paged_attention_verify(
+                q, new_cache["k_pool"], new_cache["v_pool"],
+                paged["bt_rows"], paged["kv_len"],
+                k_scale_pool=new_cache.get("k_scale_pool"),
+                v_scale_pool=new_cache.get("v_scale_pool"),
+                window=window, out_dtype=q.dtype)
         elif cache is not None and "k_pool" in cache:
             # paged cache (continuous batching): scatter new K/V into the
             # page pool, read back via the slot block tables

@@ -30,7 +30,7 @@ from repro.core.quant.types import (QuantizedTensor, dequantize,
                                     fake_quant_activation,
                                     quantize_activation)
 
-_KERNEL_BITS = (2, 4, 8)
+_KERNEL_BITS = (2, 3, 4, 8)
 
 
 def _use_pallas() -> bool:
@@ -117,7 +117,7 @@ def dense_experts(p: dict, x: jax.Array, *, dtype=None) -> jax.Array:
     """Batched expert matmul: x (E, C, K) @ w (E, K, N) -> (E, C, N).
 
     Quantized expert stacks take the expert-batched Pallas kernel: packed
-    (E, K/vpb, N) slabs are consumed directly, so the float expert stack is
+    (E, packed_rows(K), N) slabs are consumed directly, so the float expert stack is
     never materialized (the old path dequantized all E experts per call)."""
     w = p["w"]
     dtype = dtype or x.dtype

@@ -264,6 +264,23 @@ def lm_decode(cfg: ModelConfig, params: dict, tokens: jax.Array,
     return logits[:, 0, :], new_cache
 
 
+def lm_verify(cfg: ModelConfig, params: dict, tokens: jax.Array,
+              cache: dict, positions: jax.Array, paged: dict):
+    """Spec-decode verify forward: score M draft tokens per slot in one
+    batched pass. tokens: (B, M) = [last emitted token, d_1..d_{M-1}];
+    positions: (B, M) absolute (inactive slots -1). Runs the prefill-shaped
+    stack — `paged` carries bt_rows + kv_len (fill *including* the M
+    tokens) plus a "verify" marker that routes the fused small-M
+    paged-attention read (gather impl needs no marker: its prefill path
+    already reads the whole context). Returns (logits (B, M, V) f32,
+    new_cache); row m is the next-token distribution after the prefix plus
+    tokens[:, :m+1]."""
+    x = _embed(cfg, params, tokens, None, positions)
+    x, new_cache, _ = _run_stack(cfg, params, x, positions=positions,
+                                 mode="prefill", cache=cache, paged=paged)
+    return _head(cfg, params, x), new_cache
+
+
 def lm_loss(cfg: ModelConfig, params: dict, batch: dict):
     """Next-token cross-entropy (+ MoE aux). batch: tokens, labels, [mask]."""
     logits, aux = lm_forward(cfg, params, batch["tokens"],

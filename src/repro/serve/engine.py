@@ -56,11 +56,12 @@ from repro.distributed.partitioning import (serve_param_shardings,
 from repro.distributed.sharding import TP_AXIS, sharding_ctx
 from repro.models.config import ModelConfig
 from repro.models.transformer import (init_cache, lm_decode, lm_forward,
-                                      lm_prefill)
+                                      lm_prefill, lm_verify)
 from repro.serve.kvcache import (POOL_KEYS, PagePool, PageSpec,
                                  default_page_spec, paged_pool_pspecs,
                                  pool_head_dim)
-from repro.serve.sampling import sample
+from repro.serve.sampling import (sample, spec_accept_greedy,
+                                  spec_accept_sample)
 from repro.serve.scheduler import Request, Scheduler
 
 
@@ -173,14 +174,17 @@ def _sample_first_jit(logits, keys, *, temperature, top_k):
 
 def _decode_scan(cfg, params, cache, last_tok, cur_len, active,
                  block_table, key, *, k_steps, page_size,
-                 temperature, top_k):
+                 temperature, top_k, with_logits=False):
     """K fused decode steps over all slots with on-device sampling.
 
     One dispatch and one host sync per K tokens — the per-step Python/
     transfer overhead of a step-at-a-time loop would otherwise rival the
     model compute. Slots whose request finishes mid-block keep stepping;
     their extra writes fall off the block table onto the scratch page and
-    the host drops the surplus tokens. Returns ((K, S) tokens, cache).
+    the host drops the surplus tokens. Returns ((K, S) tokens, cache) —
+    or ((K, S) tokens, (K, S, V) logits, cache) under `with_logits`, for
+    the speculative draft whose temperature>0 acceptance rule needs the
+    distribution each proposal was sampled from.
     Shared by the single-device jit and the shard_map TP jit below — under
     TP, `cfg` is the head-localized per-shard view and `params`/`cache`
     are the shard-local slices (tokens, lengths, tables, key replicated).
@@ -205,11 +209,14 @@ def _decode_scan(cfg, params, cache, last_tok, cur_len, active,
         nxt = sample(logits, sk, temperature=temperature, top_k=top_k)
         tok = jnp.where(active, nxt, tok)
         clen = clen + active.astype(clen.dtype)
-        return (cache, tok, clen, key), nxt
+        return (cache, tok, clen, key), ((nxt, logits) if with_logits
+                                         else nxt)
 
-    (cache, _, _, _), toks = jax.lax.scan(
+    (cache, _, _, _), ys = jax.lax.scan(
         body, (cache, last_tok, cur_len, key), None, length=k_steps)
-    return toks, cache
+    if with_logits:
+        return ys[0], ys[1], cache
+    return ys, cache
 
 
 @functools.partial(jax.jit,
@@ -223,6 +230,62 @@ def _paged_decode_scan_jit(cfg, params, cache, last_tok, cur_len, active,
                         block_table, key, k_steps=k_steps,
                         page_size=page_size, temperature=temperature,
                         top_k=top_k)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "k_steps", "page_size",
+                                    "temperature", "top_k"),
+                   donate_argnames=("cache", "draft_cache"))
+def _spec_block_jit(cfg, params, draft_params, cache, draft_cache, last_tok,
+                    cur_len, active, block_table, key, *, k_steps, page_size,
+                    temperature, top_k):
+    """One fused speculative round: draft-propose, target-verify, accept.
+
+    The low-bit draft runs k_steps+1 autoregressive decode steps from the
+    shared `last_tok`/`cur_len` state — step i writes the K/V of the token
+    it was fed, so after the extra step the draft cache is complete through
+    position cur_len + k_steps whatever prefix the target accepts (rollback
+    is then free: rejected-tail entries sit beyond the advanced fill count
+    and are masked by construction until overwritten). The last proposal is
+    discarded; d_1..d_k plus the pending last token form the (S, k+1)
+    verify batch the target scores in a single prefill-shaped forward
+    (fused small-M page walk — see kernels/paged_attention.py). Greedy
+    acceptance emits only target argmaxes, so the stream is bit-identical
+    to target-only decode; temperature>0 uses residual resampling.
+
+    Returns (out (S, M) tokens, n_emit (S,), cache, draft_cache) — slot s
+    emits out[s, :n_emit[s]].
+    """
+    n_slots = block_table.shape[0]
+    kd, kv = jax.random.split(key)
+    m = k_steps + 1
+    draft = _decode_scan(cfg, draft_params, draft_cache, last_tok, cur_len,
+                         active, block_table, kd, k_steps=m,
+                         page_size=page_size, temperature=temperature,
+                         top_k=top_k, with_logits=(temperature > 0.0))
+    if temperature > 0.0:
+        draft_toks, draft_logits, draft_cache = draft
+    else:
+        (draft_toks, draft_cache), draft_logits = draft, None
+    # verify rows: [last_tok, d_1..d_k] at absolute positions cur_len..
+    # cur_len+k (inactive slots parked at -1 / kv_len 0 — their writes land
+    # on the scratch page and their rows read as garbage we never emit)
+    x = jnp.concatenate([last_tok[:, None], draft_toks[:m - 1].T], axis=1)
+    positions = jnp.where(
+        active[:, None],
+        cur_len[:, None] + jnp.arange(m, dtype=cur_len.dtype)[None, :], -1)
+    paged = {"bt_rows": block_table,
+             "slots": jnp.arange(n_slots, dtype=jnp.int32),
+             "kv_len": jnp.where(active, cur_len + m, 0),
+             "verify": jnp.int32(1)}
+    logits, cache = lm_verify(cfg, params, x, cache, positions, paged)
+    if temperature > 0.0:
+        out, n_emit = spec_accept_sample(
+            logits, draft_logits[:m - 1].transpose(1, 0, 2), x[:, 1:], kv,
+            temperature=temperature, top_k=top_k)
+    else:
+        out, n_emit = spec_accept_greedy(logits, x[:, 1:])
+    return out, jnp.where(active, n_emit, 0), cache, draft_cache
 
 
 # ------------------------------------------------- tensor-parallel variants
@@ -322,6 +385,15 @@ class ContinuousEngine:
     prompt state, so they cover attention-only decoders (no SSM state, no
     MLA latent prefill). See DESIGN.md "Prefix cache & chunked prefill".
 
+    `spec_decode=True` swaps the decode block for self-speculative
+    rounds: a W2/W3 draft packed from the *same* params proposes up to
+    `spec_k` tokens per slot, the target verifies them in one fused
+    (S, k+1)-row forward, and each slot emits its accepted prefix — the
+    greedy stream is bit-identical to target-only decode, only the number
+    of target forwards changes. The draft KV rides a second cache over
+    the same PageSpec/block tables. See DESIGN.md "Self-speculative
+    decoding".
+
     `prefill_bucket` trades compile count for pad waste: prompts are
     left-padded (pos = -1, masked everywhere) up to the next multiple.
     Bucket 1 reproduces the static engine's unpadded prefill bit-for-bit.
@@ -338,7 +410,8 @@ class ContinuousEngine:
                  quant_bits: int = 0, quant_group: int = 0,
                  act_bits: int = 0, paged_attn: Optional[str] = None,
                  prefix_share: bool = False, chunked_prefill: int = 0,
-                 tp: int = 1, mesh=None):
+                 tp: int = 1, mesh=None, spec_decode: bool = False,
+                 draft_bits: int = 2, spec_k: int = 4):
         if cfg.enc_dec:
             raise NotImplementedError("paged serving covers decoder-only LMs")
         if mesh is not None and tp == 1:
@@ -391,9 +464,51 @@ class ContinuousEngine:
                 raise ValueError(f"paged_attn must be 'fused' or 'gather', "
                                  f"got {paged_attn!r}")
             cfg = cfg.replace(paged_attn_impl=paged_attn)
+        self.spec_decode = bool(spec_decode)
+        self.spec_k = spec_k
+        self.draft_bits = draft_bits
+        if self.spec_decode:
+            specs = cfg.all_layer_specs()
+            if (any(s.kind != "attn" for s in specs)
+                    or cfg.attention == "mla"):
+                raise NotImplementedError(
+                    "spec_decode covers attention-only decoders: the "
+                    "verify forward rides the paged gathered/fused read "
+                    "(no SSM recurrence rewind, no MLA latent prefill)")
+            if any(s.mlp == "moe" for s in specs):
+                # capacity routing is cross-token: an (S, M) verify batch
+                # can route tokens differently from M single-token decode
+                # steps, so draft/target parity (and greedy losslessness)
+                # would silently break
+                raise NotImplementedError(
+                    "spec_decode does not cover capacity-routed MoE")
+            if tp > 1 or prefix_share:
+                raise NotImplementedError(
+                    "spec_decode is single-device and unshared for now "
+                    "(no tp>1, no prefix_share)")
+            if draft_bits not in (2, 3):
+                raise ValueError(f"draft_bits must be 2 or 3 (a draft at "
+                                 f"the target's own width buys nothing), "
+                                 f"got {draft_bits}")
+            if spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {spec_k}")
         self.cfg = cfg
         self.params = _maybe_quantize(cfg, params, quant_bits, quant_group,
                                       act_bits, mesh=self.mesh)
+        if self.spec_decode:
+            # the draft is the *same* params requantized harder — W2/W3
+            # packed sub-byte (kernels/dequant_matmul.py unpacks inline),
+            # so it adds ~bits/16 of the bf16 footprint, no second model
+            from repro.core.quant.deploy import quantize_params_for_serving
+            leaves = jax.tree_util.tree_leaves(
+                params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+            if any(isinstance(x, QuantizedTensor) for x in leaves):
+                raise ValueError(
+                    "spec_decode requantizes the float params into the "
+                    "draft; pass float params (+ quant_bits for the "
+                    "target), not a pre-packed tree")
+            self.draft_params = quantize_params_for_serving(
+                cfg, params, bits=draft_bits, group_size=quant_group)
         self.n_slots = n_slots
         self.eos_id = eos_id
         self.prefill_bucket = max(1, prefill_bucket)
@@ -420,6 +535,13 @@ class ContinuousEngine:
                                prefix_share=self.prefix_share, tp=self.tp)
         self.cache = init_cache(cfg, n_slots, self.spec.max_len,
                                 paged=self.spec)
+        if self.spec_decode:
+            # draft KV rides the same PagePool geometry (identical block
+            # tables / scratch page / kv_cache_bits) in its own pools —
+            # one allocator decision covers both caches, and the fused
+            # verify read sees the same page walk either way
+            self.draft_cache = init_cache(cfg, n_slots, self.spec.max_len,
+                                          paged=self.spec)
         if self.tp > 1:
             # shard every paged pool along its kv-head dim; page axes stay
             # whole on purpose (the scheduler's page budget must be
@@ -444,6 +566,12 @@ class ContinuousEngine:
         self.n_prefills = 0
         self.n_prefill_tokens = 0    # real prompt tokens actually prefilled
         self.n_shared_tokens = 0     # prompt tokens served from the prefix cache
+        # speculative-decoding acceptance accounting (spec_stats())
+        self.n_spec_rounds = 0       # fused draft+verify dispatches
+        self.n_draft_tokens = 0      # draft proposals across active slots
+        self.n_spec_emitted = 0      # tokens emitted by spec rounds
+        self.spec_accept_sum = np.zeros(n_slots, np.int64)   # per-slot n_emit
+        self.spec_round_count = np.zeros(n_slots, np.int64)  # per-slot rounds
 
     # -------------------------------------------------------- TP placement
     _TP_COL = ("attn/wq/w", "attn/wk/w", "attn/wv/w", "attn/wukv/w",
@@ -604,12 +732,15 @@ class ContinuousEngine:
         act = np.nonzero(self.active)[0]
         if act.size:
             did = True
-            toks = self._decode_block()                       # (K, n_slots)
-            for t in range(toks.shape[0]):
-                for slot in act:
-                    req = self.sched.slots[slot]
-                    if req is not None:                       # not yet retired
-                        self._emit(slot, req, int(toks[t, slot]), now)
+            if self.spec_decode:
+                self._spec_block(self.active.copy(), now)
+            else:
+                toks = self._decode_block()                   # (K, n_slots)
+                for t in range(toks.shape[0]):
+                    for slot in act:
+                        req = self.sched.slots[slot]
+                        if req is not None:                   # not yet retired
+                            self._emit(slot, req, int(toks[t, slot]), now)
         return did
 
     def run(self, *, clock=None, max_steps: Optional[int] = None):
@@ -715,6 +846,13 @@ class ContinuousEngine:
             logits, self.cache = _paged_prefill_jit(
                 self.cfg, self.params, jnp.asarray(toks), self.cache,
                 jnp.asarray(pos), paged)
+        if self.spec_decode:
+            # mirror the chunk into the draft cache so draft decode starts
+            # from the same fill state (its logits are discarded — the
+            # first token is always the target's)
+            _, self.draft_cache = _paged_prefill_jit(
+                self.cfg, self.draft_params, jnp.asarray(toks),
+                self.draft_cache, jnp.asarray(pos), paged)
         self.n_prefills += 1
         self.n_prefill_tokens += sum(end - start for _, _, start, end in items)
         finish = []
@@ -779,6 +917,79 @@ class ContinuousEngine:
         self.cur_len[act] += k_steps
         self.n_decode_steps += k_steps
         return np.asarray(toks)
+
+    def _spec_block(self, act: np.ndarray, now: float) -> None:
+        """One speculative round over all decoding slots.
+
+        The draft proposes up to `spec_k` tokens, the target scores them in
+        a single (S, k+1)-row verify forward, and each slot emits its
+        accepted prefix plus the target's own token for the first divergent
+        row (so even a useless draft makes one token of progress — k_eff=0
+        degenerates to a single-row verify, i.e. plain decode). k adapts to
+        the smallest remaining budget among active slots (pow2-bucketed
+        like _decode_block to bound the compiled-shape count)."""
+        self._key, sk = jax.random.split(self._key)
+        remaining = min(req.max_new - len(req.tokens)
+                        for slot, req in enumerate(self.sched.slots)
+                        if req is not None and act[slot])
+        k_eff = min(self.spec_k, max(remaining - 1, 0))
+        if k_eff:
+            k_eff = 1 << (k_eff.bit_length() - 1)
+        m = k_eff + 1
+        width = self._read_width(int(self.cur_len[act].max()) + m)
+        assert (self.cur_len.dtype == np.int32
+                and self.last_tok.dtype == np.int32), \
+            "engine host state drifted off the int32 jit contract"
+        out, n_emit, self.cache, self.draft_cache = _spec_block_jit(
+            self.cfg, self.params, self.draft_params, self.cache,
+            self.draft_cache, jnp.asarray(self.last_tok.copy()),
+            jnp.asarray(self.cur_len.copy()), jnp.asarray(act),
+            jnp.asarray(self.pool.tables[:, :width].copy()), sk,
+            k_steps=k_eff, page_size=self.spec.page_size,
+            temperature=self.temperature, top_k=self.top_k)
+        out = np.asarray(out)
+        n_emit = np.asarray(n_emit)
+        act_idx = np.nonzero(act)[0]
+        self.n_spec_rounds += 1
+        self.n_decode_steps += 1         # one target forward per round
+        self.n_draft_tokens += k_eff * act_idx.size
+        for slot in act_idx:
+            n = int(n_emit[slot])
+            self.spec_accept_sum[slot] += n
+            self.spec_round_count[slot] += 1
+            self.n_spec_emitted += n
+            # the cache holds positions 0..cur_len+n-1 = the old pending
+            # token plus the accepted drafts; the final emitted token stays
+            # unwritten (it is next round's last_tok), and the rejected
+            # tail beyond the new fill is dead by masking
+            self.cur_len[slot] += n
+            for t in range(n):
+                req = self.sched.slots[slot]
+                if req is None:          # retired mid-round (EOS/max_new)
+                    break
+                self._emit(slot, req, int(out[slot, t]), now)
+
+    def spec_stats(self) -> dict:
+        """Acceptance accounting for speculative decoding: overall rate,
+        mean accepted length per slot-round, and the per-slot means."""
+        slot_rounds = int(self.spec_round_count.sum())
+        accepted = int(self.n_spec_emitted) - slot_rounds
+        per_slot = np.where(
+            self.spec_round_count > 0,
+            self.spec_accept_sum / np.maximum(self.spec_round_count, 1), 0.0)
+        return {
+            "rounds": int(self.n_spec_rounds),
+            "slot_rounds": slot_rounds,
+            "draft_tokens": int(self.n_draft_tokens),
+            "emitted_tokens": int(self.n_spec_emitted),
+            "accepted_draft_tokens": accepted,
+            "acceptance_rate": (accepted / self.n_draft_tokens
+                                if self.n_draft_tokens else 0.0),
+            "mean_accepted_len": (self.n_spec_emitted / slot_rounds
+                                  if slot_rounds else 0.0),
+            "per_slot_mean_accepted_len": [round(float(x), 4)
+                                           for x in per_slot],
+        }
 
     def _emit(self, slot: int, req: Request, tok: int, now: float) -> None:
         if req.first_token_at is None:

@@ -41,3 +41,91 @@ def sample(logits: jax.Array, key, *, temperature: float = 1.0,
         kth = jnp.take_along_axis(srt, cut_idx[:, None], axis=-1)
         logits = jnp.where(logits < kth, -1e30, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def _filtered(logits: jax.Array, temperature: float, top_k: int) -> jax.Array:
+    """The same temperature/top-k filtering `sample` applies, batched over
+    any leading dims — spec-decode acceptance must compare the *filtered*
+    draft and target distributions or the accept ratio would mix grids."""
+    logits = logits / temperature
+    if top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[..., -top_k][..., None]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return logits
+
+
+def spec_accept_greedy(target_logits: jax.Array,
+                       draft_tokens: jax.Array):
+    """Greedy (temperature 0) speculative acceptance.
+
+    target_logits: (S, M, V) — row m is the target's next-token
+    distribution after the already-emitted prefix plus m verified tokens.
+    draft_tokens: (S, M-1) — the draft's proposals d_1..d_{M-1}, which were
+    fed as verify rows 1..M-1.
+
+    Returns (out_tokens (S, M) int32, n_emit (S,) int32): emit
+    out_tokens[:, :n_emit]. Every emitted token is the target argmax of
+    row m, and row m's context is valid iff all drafts before it matched
+    those argmaxes — so emission is *lossless by construction*: the token
+    stream is exactly what target-only greedy decode would produce,
+    whatever the draft proposed. n_emit = accepted prefix + 1 (the target's
+    own token for the first mismatching row rides along free)."""
+    t = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)    # (S, M)
+    m = target_logits.shape[1]
+    if m == 1:
+        return t, jnp.ones((t.shape[0],), jnp.int32)
+    match = (draft_tokens == t[:, :-1]).astype(jnp.int32)       # (S, M-1)
+    n_acc = jnp.sum(jnp.cumprod(match, axis=-1), axis=-1)       # leading run
+    return t, (n_acc + 1).astype(jnp.int32)
+
+
+def spec_accept_sample(target_logits: jax.Array, draft_logits: jax.Array,
+                       draft_tokens: jax.Array, key, *, temperature: float,
+                       top_k: int = 0):
+    """Temperature>0 speculative acceptance with residual resampling
+    (Leviathan et al. / Chen et al.): accept draft d_i with probability
+    min(1, p_t(d_i) / p_d(d_i)); at the first rejection sample from the
+    residual normalize(max(p_t - p_d, 0)); when every draft survives,
+    sample the bonus token from the last target row. The emitted stream is
+    distributed exactly as target-only sampling.
+
+    target_logits: (S, M, V); draft_logits: (S, M-1, V) — row i is the
+    distribution d_{i+1} was sampled from; draft_tokens: (S, M-1).
+    Returns (out_tokens (S, M) int32, n_emit (S,) int32)."""
+    s, m, v = target_logits.shape
+    pt = jax.nn.softmax(_filtered(target_logits, temperature, top_k), -1)
+    out = jnp.zeros((s, m), jnp.int32)
+    if m == 1:
+        tok = sample(target_logits[:, 0], key, temperature=temperature,
+                     top_k=top_k)
+        return out.at[:, 0].set(tok), jnp.ones((s,), jnp.int32)
+    pd = jax.nn.softmax(_filtered(draft_logits, temperature, top_k), -1)
+    ku, kr, kb = jax.random.split(key, 3)
+    p_t_d = jnp.take_along_axis(pt[:, :-1], draft_tokens[..., None],
+                                axis=-1)[..., 0]                # (S, M-1)
+    p_d_d = jnp.take_along_axis(pd, draft_tokens[..., None],
+                                axis=-1)[..., 0]                # (S, M-1)
+    u = jax.random.uniform(ku, (s, m - 1))
+    accept = u * p_d_d < p_t_d                                  # (S, M-1)
+    n_acc = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=-1), axis=-1)
+    # per-row residual resample (only row n_acc is ever used; a zero-mass
+    # residual means p_t <= p_d pointwise never triggered a rejection there,
+    # but guard it for the masked rows we discard anyway)
+    res = jnp.maximum(pt[:, :-1] - pd, 0.0)
+    mass = jnp.sum(res, axis=-1, keepdims=True)
+    res = jnp.where(mass > 0, res / jnp.maximum(mass, 1e-30), pt[:, :-1])
+    res_tok = jax.random.categorical(
+        kr, jnp.log(jnp.maximum(res, 1e-30)), axis=-1).astype(jnp.int32)
+    bonus = sample(target_logits[:, -1], kb, temperature=temperature,
+                   top_k=top_k)                                 # (S,)
+    # out[:, i] = accepted draft for i < n_acc; the resample (or bonus when
+    # everything was accepted) at i == n_acc; padding beyond stays 0
+    idx = jnp.arange(m, dtype=jnp.int32)[None, :]
+    final = jnp.where(n_acc[:, None] == m - 1, bonus[:, None],
+                      jnp.take_along_axis(
+                          res_tok, jnp.minimum(n_acc, m - 2)[:, None],
+                          axis=-1))
+    drafts = jnp.pad(draft_tokens, ((0, 0), (0, 1)))
+    out = jnp.where(idx < n_acc[:, None], drafts,
+                    jnp.where(idx == n_acc[:, None], final, 0))
+    return out.astype(jnp.int32), (n_acc + 1).astype(jnp.int32)

@@ -16,15 +16,17 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.quant.types import (compute_scales, dequantize, quantize,
-                                    quantize_activation, quantize_stacked)
+from repro.core.quant.types import (compute_scales, dequantize, pack_layout,
+                                    quantize, quantize_activation,
+                                    quantize_stacked)
 from repro.kernels import ops, ref
 from repro.kernels.paged_attention import paged_attention_pallas
-from repro.kernels.paged_harness import build_paged_case, gather_oracle
+from repro.kernels.paged_harness import (build_paged_case, build_verify_case,
+                                         gather_oracle, verify_oracle)
 from repro.models.attention import _quant_kv
 from repro.serve.kvcache import gather_dequant_pages, gather_pages
 
-BITS = [2, 4, 8]
+BITS = [2, 3, 4, 8]
 GROUPS = [-1, 32, 64, 128]
 # (M, K, N): M=1/3 decode-skinny rows, ragged (non-pow2-tile) K/N mixes
 DENSE_SHAPES = [(1, 128, 64), (3, 256, 80), (8, 128, 192)]
@@ -249,6 +251,97 @@ def test_paged_tile_regime():
     assert ops._paged_tile(256) == 256
     assert ops._paged_tile(512) == 256
     assert ops._paged_tile(1024) == 256
+
+
+# ------------------------------------------- spec-decode verify read (M>1)
+
+# (S, M, W, ps, kvh, g, hd, fills, window): the small-M verify regime —
+# per-slot fills must be 0 (idle) or >= M (the verify tail sits at the top
+# of the fill); same empty-slot / page-boundary / GQA / SWA adversaries as
+# PAGED_CASES
+VERIFY_CASES = [
+    (1, 2, 2, 8, 1, 1, 32, (9,), None),
+    (4, 3, 4, 8, 2, 3, 32, (0, 3, 8, 32), None),
+    (3, 4, 4, 8, 2, 2, 16, (5, 16, 29), 7),
+    (2, 5, 6, 16, 1, 4, 64, (33, 96), 20),
+]
+
+
+@pytest.mark.parametrize("kv_bits", [0, 8])
+@pytest.mark.parametrize("case", VERIFY_CASES)
+def test_paged_attention_verify_parity(kv_bits, case):
+    """The fused verify read (M query rows per slot, per-row causal fill
+    mask) matches the gathered dense-attention oracle."""
+    s, m, w, ps, kvh, g, hd, fills, window = case
+    q, pools, bt, kv_len = build_verify_case(
+        sum(case[:7]) + kv_bits, s, m, w, ps, kvh, g, hd, fills, kv_bits)
+    out = np.asarray(ops.paged_attention_verify(
+        q, pools["k_pool"], pools["v_pool"], bt, kv_len,
+        k_scale_pool=pools["k_scale_pool"],
+        v_scale_pool=pools["v_scale_pool"], window=window))
+    orc = np.asarray(verify_oracle(q, pools, bt, kv_len, window), np.float32)
+    live = np.asarray(kv_len) > 0
+    np.testing.assert_allclose(out[live], orc[live], rtol=2e-2, atol=2e-2)
+    assert np.all(out[~live] == 0.0)
+
+
+@pytest.mark.parametrize("kv_bits", [0, 8])
+def test_paged_attention_verify_interpret_matches_ref_exactly(kv_bits):
+    """Interpret-mode verify kernel is bit-comparable with the jnp
+    reference page walk at M>1, like the decode read at M=1."""
+    s, m, w, ps, kvh, g, hd, fills, window = VERIFY_CASES[2]
+    q, pools, bt, kv_len = build_verify_case(31 + kv_bits, s, m, w, ps, kvh,
+                                             g, hd, fills, kv_bits)
+    qg = q.reshape(s, m, kvh, g, hd).transpose(0, 2, 1, 3, 4)
+    qg = qg.reshape(s, kvh, m * g, hd)
+    for win in (window, None):
+        ker = paged_attention_pallas(
+            qg, pools["k_pool"], pools["v_pool"], bt, kv_len,
+            pools["k_scale_pool"], pools["v_scale_pool"], window=win,
+            tile=ps, m_rows=m, interpret=True)
+        rr = ref.paged_attention_ref(
+            qg, pools["k_pool"], pools["v_pool"], bt, kv_len,
+            pools["k_scale_pool"], pools["v_scale_pool"], window=win,
+            tile=ps, m_rows=m)
+        np.testing.assert_array_equal(np.asarray(ker), np.asarray(rr))
+
+
+@pytest.mark.parametrize("kv_bits", [0, 8])
+def test_paged_attention_verify_m1_matches_decode(kv_bits):
+    """A single-row verify is the decode read: same q, same pools, same
+    numbers (to f32 tolerance — XLA may vectorize the two shapes
+    differently) through both entry points."""
+    s, w, ps, kvh, g, hd, fills, window = PAGED_CASES[2]
+    q, pools, bt, kv_len = _build_paged(41 + kv_bits, s, w, ps, kvh, g, hd,
+                                        fills, kv_bits)
+    dec = np.asarray(ops.paged_attention(
+        q, pools["k_pool"], pools["v_pool"], bt, kv_len,
+        k_scale_pool=pools["k_scale_pool"],
+        v_scale_pool=pools["v_scale_pool"], window=window))
+    ver = np.asarray(ops.paged_attention_verify(
+        q[:, None], pools["k_pool"], pools["v_pool"], bt, kv_len,
+        k_scale_pool=pools["k_scale_pool"],
+        v_scale_pool=pools["v_scale_pool"], window=window))[:, 0]
+    np.testing.assert_allclose(ver, dec, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------- packed storage density
+
+@pytest.mark.parametrize("bits", BITS)
+def test_packed_footprint_is_subbyte(bits):
+    """End-to-end storage density of the packed format: qw must cost at
+    most ceil-to-group bits/8 bytes per weight — in particular W3 packs 8
+    values into 3 bytes (0.375 B/value), not one byte each."""
+    k, n = 256, 64
+    w = jax.random.normal(jax.random.PRNGKey(bits), (k, n)) * 0.1
+    qt = quantize(w, bits, 32)
+    bpg, vpg = pack_layout(bits)
+    assert qt.qw.dtype == jnp.uint8
+    assert qt.qw.shape == (-(-k // vpg) * bpg, n)
+    bytes_per_value = qt.qw.size / (k * n)
+    assert bytes_per_value <= bits / 8 + 1e-9
+    if bits == 3:
+        assert bytes_per_value <= 0.5
 
 
 # hypothesis property: quantize -> page-write -> kernel-read round trip.

@@ -1,0 +1,229 @@
+"""Self-speculative decoding tests.
+
+The core contract: greedy spec-decode emits only target argmaxes, so its
+token stream is *identical* to target-only ContinuousEngine decode — the
+draft can only change how many target forwards it takes, never the output.
+Verified across the architecture zoo (dense/GQA/SWA, int8 KV on/off) and
+both paged-attention read impls, plus acceptance-rule unit tests and
+engine gating/accounting checks.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import TINY
+from repro.models.transformer import init_lm
+from repro.serve.engine import ContinuousEngine
+from repro.serve.sampling import spec_accept_greedy, spec_accept_sample
+
+CFG = TINY.replace(n_repeats=2, d_model=64, head_dim=16, d_ff=128)
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    return init_lm(CFG, jax.random.PRNGKey(0))
+
+
+def _reqs(rng):
+    return [(rng.integers(0, CFG.vocab_size, plen), max_new)
+            for plen, max_new in [(8, 5), (13, 6), (24, 4)]]
+
+
+def _run(cfg, params, reqs, **kw):
+    eng = ContinuousEngine(cfg, params, n_slots=3, max_len=64, page_size=8,
+                           prefill_bucket=8, **kw)
+    for i, (prompt, max_new) in enumerate(reqs):
+        eng.submit(prompt, max_new=max_new, arrival=float(i % 2))
+    done = eng.run(max_steps=500)
+    return [r.tokens for r in done], eng
+
+
+def test_spec_decode_greedy_identity_zoo():
+    """Greedy spec-decode tokens are bit-identical to target-only decode
+    across dense MHA, GQA, sliding-window, and int8-KV — on both the fused
+    verify kernel and the gathered-context read."""
+    variants = [
+        ("dense", CFG),
+        ("gqa", CFG.replace(n_kv_heads=2)),
+        ("swa", CFG.replace(attn_window=12)),
+        ("int8-kv", CFG.replace(kv_cache_bits=8)),
+        ("gqa-swa-int8", CFG.replace(n_kv_heads=2, attn_window=12,
+                                     kv_cache_bits=8)),
+    ]
+    reqs = _reqs(np.random.default_rng(7))
+    for name, cfg in variants:
+        params = init_lm(cfg, jax.random.PRNGKey(0))
+        base, _ = _run(cfg, params, reqs)
+        for impl in ("fused", "gather"):
+            spec, eng = _run(cfg, params, reqs, paged_attn=impl,
+                             spec_decode=True, draft_bits=2, spec_k=4)
+            assert spec == base, f"{name}/{impl} diverged from target-only"
+            # both page pools drain (the draft cache shares the allocator)
+            assert eng.pool.n_free == eng.spec.n_pages - 1
+
+
+def test_spec_decode_full_acceptance_and_stats():
+    """A draft quantized exactly like the target proposes the target's own
+    argmaxes — every draft token is accepted, the stream still matches the
+    W3 target-only engine, and the stats see the speedup."""
+    reqs = _reqs(np.random.default_rng(7))
+    params = init_lm(CFG, jax.random.PRNGKey(0))
+    base, beng = _run(CFG, params, reqs, quant_bits=3)
+    spec, eng = _run(CFG, params, reqs, quant_bits=3, spec_decode=True,
+                     draft_bits=3, spec_k=4)
+    assert spec == base
+    st = eng.spec_stats()
+    assert st["acceptance_rate"] == 1.0
+    assert st["draft_tokens"] > 0
+    # spec rounds emit everything except each request's first token
+    # (sampled at prefill)
+    assert st["emitted_tokens"] == sum(len(t) for t in spec) - len(reqs)
+    assert st["mean_accepted_len"] > 1.0
+    # one target forward per spec round; full acceptance means strictly
+    # fewer target forwards than the token-at-a-time baseline would need
+    assert eng.n_decode_steps == st["rounds"]
+    assert st["rounds"] < beng.n_decode_steps
+
+
+def test_spec_decode_temperature_smoke():
+    """temperature>0 residual resampling: budgets respected, pool drains,
+    per-slot accounting consistent (the stream itself is distribution- not
+    bit-matched, so only invariants are asserted)."""
+    reqs = _reqs(np.random.default_rng(3))
+    params = init_lm(CFG, jax.random.PRNGKey(0))
+    toks, eng = _run(CFG, params, reqs, spec_decode=True, draft_bits=2,
+                     spec_k=4, temperature=0.8, top_k=20)
+    for t, (_, max_new) in zip(toks, reqs):
+        assert 0 < len(t) <= max_new
+    assert eng.pool.n_free == eng.spec.n_pages - 1
+    st = eng.spec_stats()
+    assert st["emitted_tokens"] == sum(len(t) for t in toks) - len(reqs)
+    assert 0.0 <= st["acceptance_rate"] <= 1.0
+
+
+def test_spec_decode_gating():
+    params = init_lm(CFG, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="draft_bits"):
+        ContinuousEngine(CFG, params, spec_decode=True, draft_bits=8)
+    with pytest.raises(ValueError, match="spec_k"):
+        ContinuousEngine(CFG, params, spec_decode=True, spec_k=0)
+    from repro.models.config import LayerSpec, MoEConfig
+    moe = CFG.replace(pattern=(LayerSpec(kind="attn", mlp="moe"),),
+                      moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=64,
+                                    capacity_factor=1.0))
+    with pytest.raises(NotImplementedError, match="MoE"):
+        ContinuousEngine(moe, init_lm(moe, jax.random.PRNGKey(0)),
+                         spec_decode=True)
+    with pytest.raises(NotImplementedError):
+        ContinuousEngine(CFG, params, spec_decode=True, prefix_share=True)
+
+
+def test_spec_decode_refuses_prepacked_params():
+    """The draft is requantized from float params; a pre-packed tree can't
+    be re-packed at a different width."""
+    from repro.core.quant.deploy import quantize_params_for_serving
+    params = init_lm(CFG, jax.random.PRNGKey(0))
+    packed = quantize_params_for_serving(CFG, params, bits=4, group_size=32)
+    with pytest.raises(ValueError, match="float params"):
+        ContinuousEngine(CFG, packed, spec_decode=True)
+
+
+# ------------------------------------------------------ acceptance rules
+
+def test_spec_accept_greedy_prefix_rule():
+    v = 16
+    t = np.array([[3, 5, 7, 9], [1, 1, 1, 1]])         # target argmaxes
+    logits = np.full((2, 4, v), -10.0, np.float32)
+    for s in range(2):
+        for m in range(4):
+            logits[s, m, t[s, m]] = 10.0
+    # slot 0: drafts match rows 0-1 then diverge; slot 1: all match
+    drafts = jnp.asarray([[3, 5, 0], [1, 1, 1]], jnp.int32)
+    out, n_emit = spec_accept_greedy(jnp.asarray(logits), drafts)
+    assert np.array_equal(np.asarray(out), t)          # always the argmaxes
+    assert np.asarray(n_emit).tolist() == [3, 4]       # 2 accepted + 1 free
+
+
+def test_spec_accept_greedy_single_row():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(3, 1, 8)),
+                         jnp.float32)
+    out, n_emit = spec_accept_greedy(logits, jnp.zeros((3, 0), jnp.int32))
+    assert np.array_equal(np.asarray(out)[:, 0],
+                          np.asarray(jnp.argmax(logits[:, 0], -1)))
+    assert np.asarray(n_emit).tolist() == [1, 1, 1]
+
+
+def test_spec_accept_sample_identical_dists_accept_all():
+    """p_draft == p_target => accept probability min(1, p_t/p_d) = 1 on
+    every row: all drafts emitted plus a bonus token."""
+    rng = np.random.default_rng(5)
+    tl = jnp.asarray(rng.normal(size=(3, 5, 32)), jnp.float32)
+    drafts = jnp.asarray(rng.integers(0, 32, size=(3, 4)), jnp.int32)
+    out, n_emit = spec_accept_sample(tl, tl[:, :-1], drafts,
+                                     jax.random.PRNGKey(0), temperature=0.7,
+                                     top_k=0)
+    assert np.asarray(n_emit).tolist() == [5, 5, 5]
+    assert np.array_equal(np.asarray(out)[:, :4], np.asarray(drafts))
+
+
+def test_spec_accept_sample_rejecting_draft():
+    """A draft proposing tokens the target gives ~zero mass is rejected at
+    row 0; the resample must come from the target's residual support."""
+    v = 16
+    tl = np.full((1, 3, v), -30.0, np.float32)
+    tl[:, :, 2] = 5.0                                   # target: token 2
+    dl = np.full((1, 2, v), -30.0, np.float32)
+    dl[:, :, 9] = 5.0                                   # draft: token 9
+    drafts = jnp.asarray([[9, 9]], jnp.int32)
+    out, n_emit = spec_accept_sample(jnp.asarray(tl), jnp.asarray(dl),
+                                     drafts, jax.random.PRNGKey(1),
+                                     temperature=1.0)
+    assert np.asarray(n_emit).tolist() == [1]
+    assert int(np.asarray(out)[0, 0]) == 2
+
+
+# hypothesis property: greedy acceptance is lossless by construction —
+# whatever the draft proposes, the emitted prefix is exactly the target
+# argmax sequence. Guarded dev-only import (see tests/test_property.py).
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                      # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+
+    @settings(max_examples=50, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16), s=st.integers(1, 4),
+           m=st.integers(1, 6), v=st.integers(2, 33),
+           adversarial=st.booleans())
+    def test_property_greedy_acceptance_lossless(seed, s, m, v, adversarial):
+        """For random target logits and *any* draft — random, or an
+        adversarial copy of the argmaxes with one flipped position — every
+        emitted token equals the target argmax and n_emit never exceeds
+        the first divergence + 1."""
+        rng = np.random.default_rng(seed)
+        logits = jnp.asarray(rng.normal(size=(s, m, v)), jnp.float32)
+        t = np.asarray(jnp.argmax(logits, -1))
+        if adversarial and m > 1:
+            drafts = t[:, :-1].copy()
+            flip = rng.integers(0, m - 1)
+            drafts[:, flip] = (drafts[:, flip] + 1) % v
+        else:
+            drafts = rng.integers(0, v, size=(s, m - 1))
+        out, n_emit = spec_accept_greedy(logits,
+                                         jnp.asarray(drafts, jnp.int32))
+        out, n_emit = np.asarray(out), np.asarray(n_emit)
+        for si in range(s):
+            n = int(n_emit[si])
+            assert 1 <= n <= m
+            # lossless: the emitted prefix is the target's own stream
+            assert np.array_equal(out[si, :n], t[si, :n])
+            # and n is exactly (first draft divergence) + 1
+            div = m - 1
+            for j in range(m - 1):
+                if drafts[si, j] != t[si, j]:
+                    div = j
+                    break
+            assert n == div + 1
