@@ -12,6 +12,16 @@ a packed W2/W3 draft of the same params proposes `--spec-k` tokens per
 round, the target verifies in one forward — greedy output stays
 bit-identical to target-only decode, and the summary reports the
 acceptance counters.
+
+Traffic shapes come from serve/traffic.py: `--trace poisson` (default
+trickle), `--trace bursty` (on/off overload), or `--trace uniform`;
+`--batch-frac` marks that fraction of requests batch-class. `--preempt`
+arms priority scheduling with KV spill — interactive requests evict
+batch victims under pressure (`--age-promote` bounds batch starvation) —
+and the summary reports per-class TTFT/TPOT percentiles, goodput, and
+the preemption/spill counters. `--virtual-clock` drives the run on the
+deterministic step clock instead of wall time (same seed, same numbers,
+every machine).
 """
 from __future__ import annotations
 
@@ -27,12 +37,9 @@ from repro.core.normtweak.pipeline import NTConfig, norm_tweak_ptq
 from repro.distributed.partitioning import rules_for_config
 from repro.distributed.sharding import sharding_ctx
 from repro.models.transformer import init_lm
+from repro.serve import traffic
 from repro.serve.engine import ContinuousEngine, ServeEngine
 from repro.utils.tree import tree_size_bytes
-
-
-def _pct(xs, q):
-    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
 
 
 def build_params(cfg, args):
@@ -54,30 +61,29 @@ def build_params(cfg, args):
 
 
 def make_workload(cfg, args):
-    """Poisson arrivals with uniform prompt-length / decode-length mix.
+    """Seeded trace from the traffic harness (serve/traffic.py): Poisson
+    trickle, bursty on/off overload, or uniform arrivals, with a
+    deterministic interactive/batch class mix.
 
     `--shared-prefix N` models system-prompt traffic: every request's
     prompt starts with the same N tokens (the prefix cache's target
     workload) followed by a unique tail."""
-    rng = np.random.default_rng(args.seed)
-    inter = (rng.exponential(1.0 / args.rate, args.requests)
-             if args.rate > 0 else np.zeros(args.requests))
-    arrivals = np.cumsum(inter)
-    system = rng.integers(0, cfg.vocab_size, args.shared_prefix)
-    work = []
-    for i in range(args.requests):
-        plen = int(rng.integers(args.prompt_len_min, args.prompt_len_max + 1))
-        mnew = int(rng.integers(args.max_new_min, args.max_new_max + 1))
-        prompt = np.concatenate(
-            [system, rng.integers(0, cfg.vocab_size, plen)])
-        work.append((prompt, mnew, float(arrivals[i])))
-    return work
+    return traffic.make_trace(
+        kind=args.trace, n=args.requests,
+        rate=args.rate if args.rate > 0 else 1e9,
+        seed=args.seed, vocab_size=cfg.vocab_size,
+        prompt_len=(args.prompt_len_min, args.prompt_len_max),
+        max_new=(args.max_new_min, args.max_new_max),
+        batch_frac=args.batch_frac,
+        burst_len=args.burst_len, idle_len=args.idle_len,
+        burst_rate_mult=args.burst_rate_mult,
+        shared_prefix=args.shared_prefix)
 
 
 def run_continuous(cfg, params, work, args):
     # per-slot capacity must cover a bucket-padded prompt plus max decode,
     # or the bucket-length warm-up requests below would overflow it
-    plen_max = max(len(p) for p, _, _ in work)
+    plen_max = max(len(it.prompt) for it in work)
     bucket_up = -(-plen_max // args.prefill_bucket) * args.prefill_bucket
     max_len = bucket_up + args.max_new_max
     eng = ContinuousEngine(cfg, params, n_slots=args.slots,
@@ -87,7 +93,9 @@ def run_continuous(cfg, params, work, args):
                            prefix_share=args.prefix_share,
                            chunked_prefill=args.chunked_prefill,
                            tp=args.tp, spec_decode=args.spec_decode,
-                           draft_bits=args.draft_bits, spec_k=args.spec_k)
+                           draft_bits=args.draft_bits, spec_k=args.spec_k,
+                           preempt=args.preempt,
+                           age_promote=args.age_promote)
     if args.tp > 1:
         rep = eng.tp_placement_report()
         print(f"tensor-parallel x{args.tp}: params "
@@ -100,7 +108,7 @@ def run_continuous(cfg, params, work, args):
     # both shallow and to full depth so the common (k, width) decode-scan
     # shapes compile before timing (odd depth/remaining combos in the real
     # traffic can still hit a fresh shape mid-run)
-    buckets = sorted({eng._bucket(len(p)) for p, _, _ in work})
+    buckets = sorted({eng._bucket(len(it.prompt)) for it in work})
     waves = 2 if args.prefix_share else 1
     shared_floor = ((args.shared_prefix // args.page_size) * args.page_size
                     if args.prefix_share else 0)
@@ -123,29 +131,38 @@ def run_continuous(cfg, params, work, args):
     # behaviour reflect measured traffic alone
     eng.n_decode_steps = eng.n_prefills = 0
     eng.n_prefill_tokens = eng.n_shared_tokens = 0
+    eng.n_spilled_pages = eng.n_restored_pages = 0
+    eng.sched.events.clear()
+    eng.sched.n_preemptions = eng.sched.n_restored = eng.sched.n_rejected = 0
+    eng.sched.n_finished_ok = eng.sched.n_finished_preempted = 0
     if args.spec_decode:
         eng.n_spec_rounds = eng.n_draft_tokens = eng.n_spec_emitted = 0
         eng.spec_accept_sum[:] = 0
         eng.spec_round_count[:] = 0
     eng.pool.clear_prefix_cache()
 
-    for prompt, max_new, arrival in work:
-        eng.submit(prompt, max_new=max_new, arrival=arrival)
     t0 = time.time()
-    done = eng.run(clock=lambda: time.time() - t0, max_steps=1_000_000)
+    clock = None if args.virtual_clock else (lambda: time.time() - t0)
+    report = traffic.replay(eng, work, clock=clock, max_steps=1_000_000)
     dt = time.time() - t0
+    done = report["requests"]
     total_tok = sum(len(r.tokens) for r in done)
-    lat = [r.finished_at - r.arrival for r in done]
-    ttft = [r.first_token_at - r.arrival for r in done]
     print(f"continuous: {len(done)} requests, {total_tok} tokens in {dt:.2f}s "
           f"({total_tok / dt:.1f} tok/s; {eng.n_decode_steps} decode steps, "
           f"{eng.n_prefills} prefills)")
     print(f"  prefilled {eng.n_prefill_tokens} prompt tokens, "
           f"{eng.n_shared_tokens} reused from the prefix cache "
           f"({eng.pool.n_cached} pages cached)")
-    print(f"  latency  p50 {_pct(lat, 50):.3f}s  p90 {_pct(lat, 90):.3f}s  "
-          f"p99 {_pct(lat, 99):.3f}s")
-    print(f"  ttft     p50 {_pct(ttft, 50):.3f}s  p99 {_pct(ttft, 99):.3f}s")
+    if args.preempt:
+        sc = report["scheduler"]
+        sp = report["spill"]
+        print(f"  overload {sc['n_preemptions']} preemptions "
+              f"({sp['spilled_pages']} pages spilled, "
+              f"{sp['restored_pages']} restored), "
+              f"{sc['n_rejected']} rejected, "
+              f"{sc['n_finished_preempted']} finished after preemption")
+    print(traffic.format_report(
+        report, unit="steps" if args.virtual_clock else "s"))
     if args.spec_decode:
         st = eng.spec_stats()
         print(f"  spec     {st['rounds']} rounds, {st['draft_tokens']} draft "
@@ -161,8 +178,8 @@ def run_static(cfg, params, work, args):
     """Static-batch baseline: uniform-length groups decoded in lockstep."""
     eng = ServeEngine(cfg, params)
     groups: dict[int, list] = {}
-    for prompt, max_new, _ in work:
-        groups.setdefault(len(prompt), []).append((prompt, max_new))
+    for it in work:
+        groups.setdefault(len(it.prompt), []).append((it.prompt, it.max_new))
     t0 = time.time()
     total = 0
     for plen, items in sorted(groups.items()):
@@ -195,6 +212,28 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--rate", type=float, default=8.0,
                     help="Poisson arrival rate, req/s (0 = all at t=0)")
+    ap.add_argument("--trace", default="poisson",
+                    choices=["poisson", "bursty", "uniform"],
+                    help="arrival shape (bursty = on/off overload)")
+    ap.add_argument("--batch-frac", type=float, default=0.5,
+                    help="fraction of requests in the batch SLO class "
+                         "(deterministic stride, not sampled)")
+    ap.add_argument("--burst-len", type=float, default=4.0,
+                    help="bursty trace: on-phase length, time units")
+    ap.add_argument("--idle-len", type=float, default=8.0,
+                    help="bursty trace: off-phase length, time units")
+    ap.add_argument("--burst-rate-mult", type=float, default=8.0,
+                    help="bursty trace: rate multiplier during a burst")
+    ap.add_argument("--preempt", action="store_true",
+                    help="priority scheduling with preemptive KV spill: "
+                         "interactive arrivals evict batch victims to host "
+                         "RAM under slot/page pressure")
+    ap.add_argument("--age-promote", type=float, default=None,
+                    help="promote a batch request to interactive priority "
+                         "after waiting this long (starvation bound)")
+    ap.add_argument("--virtual-clock", action="store_true",
+                    help="drive the run on the deterministic step clock "
+                         "instead of wall time")
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel width for the continuous engine "

@@ -172,6 +172,51 @@ def _sample_first_jit(logits, keys, *, temperature, top_k):
                                         top_k=top_k)[0])(logits, keys)
 
 
+# ------------------------------------------------------ KV spill / restore
+#
+# Preemption moves a victim slot's exclusively-owned live pages to host RAM
+# and back. Both directions walk the whole cache tree and touch only the
+# paged pool leaves (k/v pools + their int8 scale pools), indexing each
+# along its page axis — (P, ps, KVH[, hd]) unstacked, (L, P, ...) for the
+# scan-stacked layer dim — so one call moves every layer's slice of the
+# spilled pages at once. Page-count shapes are pow2-padded by the engine
+# (pad entries target the scratch page, which is never read) to bound the
+# number of compiled shapes.
+
+def _pool_page_axis(key: str, ndim: int) -> int:
+    """Page axis of a paged pool leaf: two dims left of the kv-head dim
+    (pool layout ... P, page_size, KVH[, hd])."""
+    return pool_head_dim(key, ndim) - 2
+
+
+@jax.jit
+def _spill_gather_jit(cache, idx):
+    """Gather pages `idx` (P,) from every pool leaf -> host-bound tree
+    with a leading/inner page dim of len(idx); non-pool leaves drop."""
+    def walk(tree, key=None):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        if key in POOL_KEYS:
+            return jnp.take(tree, idx, axis=_pool_page_axis(key, tree.ndim))
+        return None
+    return walk(cache)
+
+
+@functools.partial(jax.jit, donate_argnames=("cache",))
+def _spill_scatter_jit(cache, idx, host):
+    """Scatter a spill snapshot back: write host[...] into pages `idx` of
+    every pool leaf (inverse of _spill_gather_jit)."""
+    def walk(tree, htree, key=None):
+        if isinstance(tree, dict):
+            return {k: walk(v, htree[k], k) for k, v in tree.items()}
+        if key in POOL_KEYS and htree is not None:
+            ax = _pool_page_axis(key, tree.ndim)
+            loc = (slice(None),) * ax + (idx,)
+            return tree.at[loc].set(htree.astype(tree.dtype))
+        return tree
+    return walk(cache, host)
+
+
 def _decode_scan(cfg, params, cache, last_tok, cur_len, active,
                  block_table, key, *, k_steps, page_size,
                  temperature, top_k, with_logits=False):
@@ -394,6 +439,17 @@ class ContinuousEngine:
     the same PageSpec/block tables. See DESIGN.md "Self-speculative
     decoding".
 
+    `preempt=True` arms overload discipline: `submit(..., priority=1)`
+    marks batch-class work, and when an interactive request cannot be
+    admitted the scheduler evicts a batch victim — the engine spills the
+    victim's exclusively-owned live KV pages to host RAM (shared prefix
+    pages stay resident by reference), frees its slot, and restores it
+    later by re-stitching the block table and scattering the spilled
+    pages back, resuming the token stream exactly where it stopped (a
+    new `preempted` lifecycle state beside prefilling/decoding;
+    `age_promote` bounds batch starvation). See DESIGN.md "Overload &
+    preemption".
+
     `prefill_bucket` trades compile count for pad waste: prompts are
     left-padded (pos = -1, masked everywhere) up to the next multiple.
     Bucket 1 reproduces the static engine's unpadded prefill bit-for-bit.
@@ -411,7 +467,9 @@ class ContinuousEngine:
                  act_bits: int = 0, paged_attn: Optional[str] = None,
                  prefix_share: bool = False, chunked_prefill: int = 0,
                  tp: int = 1, mesh=None, spec_decode: bool = False,
-                 draft_bits: int = 2, spec_k: int = 4):
+                 draft_bits: int = 2, spec_k: int = 4,
+                 preempt: bool = False,
+                 age_promote: Optional[float] = None):
         if cfg.enc_dec:
             raise NotImplementedError("paged serving covers decoder-only LMs")
         if mesh is not None and tp == 1:
@@ -445,6 +503,26 @@ class ContinuousEngine:
             cfg = cfg.replace(tp=tp)
         self.tp = tp
         self.mesh = mesh if tp > 1 else None
+        self.preempt = bool(preempt)
+        if self.preempt:
+            has_ssm = any(spec.kind != "attn"
+                          for spec in cfg.all_layer_specs())
+            if has_ssm or cfg.attention == "mla":
+                # SSM recurrence state is slot-indexed, not page-addressed
+                # (a spill snapshot of pages misses it), and a mid-prefill
+                # MLA victim would need the gathered-context suffix
+                # prefill MLA doesn't have — same wall as chunked prefill
+                raise NotImplementedError(
+                    "preempt covers attention-only decoders "
+                    "(no SSM blocks, no MLA)")
+            if tp > 1:
+                raise NotImplementedError(
+                    "preempt + tensor-parallel serving is an open item "
+                    "(spill must gather per-shard kv-head slices)")
+            if spec_decode:
+                raise NotImplementedError(
+                    "preempt + spec_decode is an open item (the draft "
+                    "cache would need spilling in lockstep)")
         if prefix_share or chunked_prefill:
             has_ssm = any(spec.kind != "attn"
                           for spec in cfg.all_layer_specs())
@@ -532,7 +610,10 @@ class ContinuousEngine:
         self.pool = PagePool(self.spec, n_slots,
                              prefix_cache=self.prefix_share)
         self.sched = Scheduler(n_slots, self.pool,
-                               prefix_share=self.prefix_share, tp=self.tp)
+                               prefix_share=self.prefix_share, tp=self.tp,
+                               age_promote=age_promote,
+                               preempt_hook=(self._spill_slot
+                                             if self.preempt else None))
         self.cache = init_cache(cfg, n_slots, self.spec.max_len,
                                 paged=self.spec)
         if self.spec_decode:
@@ -566,6 +647,10 @@ class ContinuousEngine:
         self.n_prefills = 0
         self.n_prefill_tokens = 0    # real prompt tokens actually prefilled
         self.n_shared_tokens = 0     # prompt tokens served from the prefix cache
+        # preemption accounting: pages actually moved (kept-by-reference
+        # shared pages never count — spill must not duplicate them)
+        self.n_spilled_pages = 0     # owned live pages copied to host RAM
+        self.n_restored_pages = 0    # pages scattered back on re-admission
         # speculative-decoding acceptance accounting (spec_stats())
         self.n_spec_rounds = 0       # fused draft+verify dispatches
         self.n_draft_tokens = 0      # draft proposals across active slots
@@ -693,7 +778,10 @@ class ContinuousEngine:
 
     # ------------------------------------------------------------- intake
     def submit(self, prompt: np.ndarray, *, max_new: int = 32,
-               arrival: float = 0.0) -> Request:
+               arrival: float = 0.0, priority: int = 0) -> Request:
+        """`priority`: SLO class — 0 interactive (may preempt batch work
+        when `preempt=True`), 1 batch (admitted when interactive traffic
+        leaves room; aging keeps it starvation-free)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size + max_new > self.spec.max_len:
             raise ValueError(
@@ -708,10 +796,68 @@ class ContinuousEngine:
                 f"request needs {need} pages but the pool only has "
                 f"{self.spec.n_pages - 1} allocatable pages")
         req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new,
-                      arrival=arrival)
+                      arrival=arrival, priority=priority)
         self._next_rid += 1
         self.sched.submit(req)
         return req
+
+    # -------------------------------------------------- preemption support
+    def _pad_pages(self, pages: list[int]) -> np.ndarray:
+        """Pow2-pad a page-id list with scratch-page entries so the spill
+        gather/scatter jits compile O(log max_pages) shapes, not one per
+        distinct spill size. Scratch writes/reads are dead by construction."""
+        n = max(1, len(pages))
+        padded = 1 << (n - 1).bit_length()
+        from repro.serve.kvcache import SCRATCH_PAGE
+        return np.asarray(pages + [SCRATCH_PAGE] * (padded - len(pages)),
+                          np.int32)
+
+    def _spill_slot(self, slot: int, req: Request, now: float):
+        """Scheduler preempt hook: checkpoint `slot`'s KV and host state so
+        the request can resume later exactly where it stopped.
+
+        Pool bookkeeping (which pages spill by copy vs stay resident by
+        reference) lives in PagePool.spill; this hook supplies the data
+        movement — a jitted whole-tree page gather, synced to numpy so the
+        snapshot really lives in host RAM — and clears the engine's slot
+        mirrors. Owned live pages only: shared prefix pages never move."""
+        n_live = int(self.cur_len[slot])
+
+        def copy_out(pages):
+            host = _spill_gather_jit(self.cache, self._pad_pages(pages))
+            host = jax.tree.map(np.asarray, host)   # force sync, host RAM
+            self.n_spilled_pages += len(pages)
+            return host
+
+        req.prefill_done = slot not in self._prefilling
+        snap = self.pool.spill(slot, n_live, copy_out)
+        self._prefilling.pop(slot, None)
+        self.active[slot] = False
+        self.cur_len[slot] = 0
+        self.last_tok[slot] = 0
+        return snap
+
+    def _restore_slot(self, slot: int, req: Request) -> None:
+        """Finish a scheduler restore: scatter the spilled KV back into the
+        fresh pages the pool picked, rebuild the slot's host mirrors, and
+        re-enter the request where it left off — decoding slots resume with
+        their last emitted token pending, mid-prefill slots rejoin the
+        chunked-prefill set at their old progress (only tokens that were
+        never prefilled get prefilled; nothing is recomputed)."""
+        snap = req.spill
+        assert snap is not None and snap.restored is not None
+        if snap.copied:
+            idx = self._pad_pages(snap.restored)
+            self.cache = _spill_scatter_jit(self.cache, jnp.asarray(idx),
+                                            snap.host)
+            self.n_restored_pages += len(snap.copied)
+        req.spill = None
+        self.cur_len[slot] = snap.n_live
+        if req.prefill_done:
+            self.last_tok[slot] = req.tokens[-1]
+            self.active[slot] = True
+        else:
+            self._prefilling[slot] = req
 
     # ------------------------------------------------------------ serving
     def step(self, now: float = 0.0) -> bool:
@@ -721,6 +867,14 @@ class ContinuousEngine:
         False when there was nothing to do."""
         did = False
         for slot, req in self.sched.admit(now):
+            if req.spill is not None:
+                # re-admission of a preempted request: scatter its spilled
+                # KV back and resume (decode or mid-prompt prefill) — no
+                # token is ever re-prefilled, the stream picks up exactly
+                # where the eviction cut it
+                did = True
+                self._restore_slot(slot, req)
+                continue
             # a prefix hit starts the prefill past the shared pages — the
             # cache already holds positions 0..n_shared-1 for this prompt
             self.cur_len[slot] = req.n_shared

@@ -29,6 +29,17 @@ The index itself holds one reference per cached page, so a cached page
 survives its last slot retiring; index-only pages (refcount 1) are the
 eviction pool when fresh allocations outrun the free list.
 
+Preemption support: ``spill(slot)`` checkpoints a victim slot's mapping so
+the slot (and its exclusively-owned pages) can be handed to a higher-class
+request, and ``restore(slot, snap)`` re-stitches an equivalent block table
+later. Pages the slot shares with anyone else (prefix-index entries, other
+slots) are *kept by reference* — the snapshot holds one refcount on each, so
+they survive on device untouched and spill never duplicates prefix-cache
+pages. Only exclusively-owned live pages have their contents handed to the
+caller (`copy_out`) for host storage; the allocator tracks snapshot-held
+references so `check_invariants` keeps conserving pages across the whole
+preempt -> spill -> restore lifecycle.
+
 Layering note: repro.models.{attention,mla,blocks} import this module, so
 it must stay dependency-free — importing anything from repro.models (or
 repro.serve.engine) here would create a package cycle.
@@ -38,7 +49,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 from collections import OrderedDict
-from typing import Optional
+from typing import Any, Callable, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -68,6 +79,31 @@ def default_page_spec(n_slots: int, max_len: int,
     max_pages = -(-max_len // page_size)
     return PageSpec(n_pages=1 + n_slots * max_pages, page_size=page_size,
                     max_pages=max_pages)
+
+
+@dataclasses.dataclass
+class SpillSnapshot:
+    """Checkpoint of one slot's page mapping taken by ``PagePool.spill``.
+
+    ``kept`` pages stay resident on device — the snapshot holds one
+    reference on each, so neither the free list nor prefix-cache eviction
+    can reclaim them while the request sits preempted. ``copied`` pages
+    were exclusively owned (refcount 1); their contents were handed to the
+    spill caller's `copy_out` and the pages themselves returned to the free
+    list — the ids recorded here are stale the moment spill returns and are
+    kept only so restore knows *where* in the rebuilt table the host data
+    goes. ``host`` is whatever `copy_out` returned (the engine stores the
+    gathered KV tree as numpy — host RAM)."""
+
+    n_pages: int                     # pages the slot had mapped (full budget)
+    n_live: int                      # tokens whose KV was resident at spill
+    kept: list                       # (table_pos, page_id) resident by ref
+    copied: list                     # table_pos of pages whose data spilled
+    host: Any = None                 # opaque payload from copy_out
+    restored: Optional[list] = None  # fresh page ids restore picked for the
+    #                                  copied positions (set by restore, in
+    #                                  snap.copied order) — the engine
+    #                                  scatters `host` back into these
 
 
 class PagePool:
@@ -104,6 +140,11 @@ class PagePool:
         # bumped on every index mutation; lets admission cache a blocked
         # queue head's prefix lookup across ticks
         self.generation = 0
+        # references held by live SpillSnapshots (preempted slots): counted
+        # into refcount so eviction/free can't touch a spilled page, and
+        # tracked separately so check_invariants can still prove
+        # conservation while requests sit preempted
+        self._spill_refs = np.zeros(spec.n_pages, np.int32)
 
     @property
     def n_free(self) -> int:
@@ -285,6 +326,99 @@ class PagePool:
                 self._free.append(int(p))
         self.tables[slot] = -1
 
+    # ---------------------------------------------------- preemption spill
+    def slot_owned_pages(self, slot: int) -> int:
+        """Mapped pages only this slot holds (refcount 1) — the pages a
+        preemption would actually return to the free list. The scheduler
+        consults this before picking a victim so it never spills a slot
+        whose pages are all shared (freeing nothing)."""
+        row = self.tables[slot]
+        return int(sum(1 for p in row if p >= 0 and self.refcount[p] == 1))
+
+    def spill(self, slot: int, n_live_tokens: int,
+              copy_out: Callable[[list], Any]) -> SpillSnapshot:
+        """Checkpoint and unmap `slot` so the slot + its owned pages can be
+        reassigned; returns the snapshot `restore` later consumes.
+
+        Pages with refcount > 1 (prefix-index entries, pages other slots
+        stitched) are *kept by reference*: the snapshot takes one refcount
+        on each and their contents never move — spill cannot duplicate a
+        prefix-cache page by construction. Exclusively-owned pages holding
+        live tokens (positions 0..n_live_tokens-1) are passed to `copy_out`
+        — called BEFORE any page is released, so the caller can read their
+        contents off-device synchronously — and then freed along with the
+        dead tail pages (allocated for future decode, never written)."""
+        row = self.tables[slot]
+        n_mapped = int(np.sum(row >= 0))
+        assert n_mapped > 0, f"slot {slot} has nothing to spill"
+        live = self.spec.pages_for(n_live_tokens)
+        assert live <= n_mapped, \
+            f"slot {slot}: {n_live_tokens} live tokens exceed its " \
+            f"{n_mapped}-page mapping"
+        index_pages = set(self._prefix_index.values())
+        kept, copied = [], []
+        for i in range(n_mapped):
+            page = int(row[i])
+            if self.refcount[page] > 1:
+                kept.append((i, page))
+            elif i < live:
+                # exclusively owned AND written: its contents exist nowhere
+                # else. A prefix-index page can never land here (the index
+                # itself holds a reference, so refcount >= 2).
+                assert page not in index_pages, \
+                    f"prefix-index page {page} about to be spilled by copy"
+                copied.append(i)
+        host = copy_out([int(row[i]) for i in copied]) if copied else None
+        snap = SpillSnapshot(n_pages=n_mapped, n_live=n_live_tokens,
+                             kept=kept, copied=copied, host=host)
+        for _, page in kept:
+            self.refcount[page] += 1
+            self._spill_refs[page] += 1
+        self.release(slot)
+        return snap
+
+    def can_restore(self, snap: SpillSnapshot) -> bool:
+        """True when the fresh pages a restore needs are available now."""
+        fresh = snap.n_pages - len(snap.kept)
+        return fresh <= len(self._free) + self._n_evictable()
+
+    def restore(self, slot: int, snap: SpillSnapshot) -> list[int]:
+        """Re-stitch `slot`'s block table from a spill snapshot.
+
+        Kept pages return to their original table positions (the snapshot's
+        reference converts into the slot's — contents were never touched).
+        Every other position gets a fresh page; the ids at the snapshot's
+        `copied` positions are returned in order so the caller can scatter
+        the host KV back in. Dead-tail positions get fresh (garbage) pages
+        too — they sit beyond the fill count, masked by construction, same
+        as a normal allocation."""
+        assert np.all(self.tables[slot] == -1), f"slot {slot} already mapped"
+        fresh_n = snap.n_pages - len(snap.kept)
+        if fresh_n > len(self._free) + self._n_evictable():
+            raise RuntimeError(f"page pool exhausted on restore: need "
+                               f"{fresh_n} fresh, free {len(self._free)}")
+        kept_pos = {i for i, _ in snap.kept}
+        copied_pos = set(snap.copied)
+        for i, page in snap.kept:
+            # snapshot ref -> slot ref: net refcount unchanged
+            self.tables[slot, i] = page
+            self._spill_refs[page] -= 1
+            assert self._spill_refs[page] >= 0, "spill ref over-released"
+        out = []
+        for i in range(snap.n_pages):
+            if i in kept_pos:
+                continue
+            if not self._free:
+                self._evict_one()
+            page = self._free.pop()
+            self.refcount[page] += 1
+            self.tables[slot, i] = page
+            if i in copied_pos:
+                out.append(page)
+        # out[] aligns with snap.copied: both ascend by table position
+        snap.restored = out
+        return out
+
     def check_invariants(self) -> None:
         """Assert the refcount/free-list/index bookkeeping is consistent:
         every page's refcount equals its holder count, the free list is
@@ -294,6 +428,8 @@ class PagePool:
         counts = np.bincount(held, minlength=self.spec.n_pages)
         for page in self._prefix_index.values():
             counts[page] += 1
+        assert np.all(self._spill_refs >= 0), "negative spill refcount"
+        counts = counts + self._spill_refs
         assert np.all(self.refcount >= 0), "negative refcount"
         assert np.array_equal(self.refcount, counts), \
             "refcounts out of sync with holders"

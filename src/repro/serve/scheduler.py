@@ -1,14 +1,28 @@
 """Continuous-batching scheduler: admission queue + slot/page bookkeeping.
 
 Holds per-request state (prompt, emitted tokens, done, timing) and decides
-which queued request enters which slot. Admission is FIFO with head-of-line
-blocking: a request is admitted only when a slot is free AND the page pool
-can cover its whole budget (prompt + max_new tokens), so a running request
-can never hit pool exhaustion mid-decode. Pages return to the pool the
-moment a request retires. A request whose budget exceeds the block-table
-width is *structurally* un-admittable — it is rejected at the queue head
-(``rejected=True``) rather than blocking the queue forever or raising
-mid-admit.
+which queued request enters which slot. Admission is priority-ordered FIFO
+over SLO classes (0 = ``interactive``, 1 = ``batch``): within a class
+requests admit in arrival order, the interactive queue head is always
+considered before the batch head, and an *aging* rule promotes a batch
+request to interactive standing once it has waited ``age_promote`` time
+units — so sustained interactive pressure can delay batch work but never
+starve it forever. A request is admitted only when a slot is free AND the
+page pool can cover its whole budget (prompt + max_new tokens), so a
+running request can never hit pool exhaustion mid-decode. A request whose
+budget exceeds the block-table width is *structurally* un-admittable — it
+is retired as ``rejected`` rather than blocking its queue forever or
+raising mid-admit.
+
+With a ``preempt_hook`` installed (the engine wires its KV spill here), a
+*true* interactive head that cannot be admitted — no free slot, or not
+enough pages — may evict a running batch request: the victim's KV pages
+spill (owned pages to host RAM, shared prefix pages stay resident by
+reference — see kvcache.SpillSnapshot), the slot frees, and the victim
+re-queues at the *front* of its class carrying its progress, to be
+re-admitted by ``restore`` when capacity returns. Aged batch requests gain
+admission standing but never preemption rights, so batch work cannot churn
+batch work.
 
 With ``prefix_share=True`` admission consults the pool's prefix index:
 pages covering the prompt's cached full-page prefix are stitched into the
@@ -17,18 +31,22 @@ non-shared page budget, and ``req.n_shared`` tells the engine how many
 prompt tokens are already in cache (its prefill starts there).
 
 This module is model-free — the execution core (jitted prefill/decode over
-the paged cache) lives in serve/engine.py.
+the paged cache, and the actual KV spill/restore data movement) lives in
+serve/engine.py.
 """
 from __future__ import annotations
 
 import bisect
 import dataclasses
 from collections import deque
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
-from repro.serve.kvcache import PagePool
+from repro.serve.kvcache import PagePool, SpillSnapshot
+
+INTERACTIVE, BATCH = 0, 1
+N_CLASSES = 2
 
 
 @dataclasses.dataclass
@@ -39,15 +57,23 @@ class Request:
     prompt: np.ndarray              # (L,) int32
     max_new: int
     arrival: float = 0.0
+    priority: int = INTERACTIVE     # SLO class: 0 interactive, 1 batch
     # lifecycle (filled by the scheduler/engine)
     tokens: list = dataclasses.field(default_factory=list)
     slot: int = -1
     done: bool = False
     rejected: bool = False          # structurally un-admittable (too wide)
     n_shared: int = 0               # prompt tokens served from the prefix cache
-    admitted_at: Optional[float] = None
+    admitted_at: Optional[float] = None   # FIRST admission (not re-admits)
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
+    # preemption lifecycle
+    n_preempts: int = 0             # times this request was evicted mid-run
+    spill: Optional[SpillSnapshot] = None   # set while preempted
+    prefill_done: bool = False      # had it reached decode when preempted?
+    queue_wait: float = 0.0         # total time spent waiting for a slot,
+    #                                 accumulated across re-admissions
+    _enqueued_at: float = 0.0       # start of the current waiting stretch
 
     @property
     def n_prompt(self) -> int:
@@ -58,9 +84,25 @@ class Request:
         """Worst-case tokens this request may occupy in the cache."""
         return self.n_prompt + self.max_new
 
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token, from arrival (None until one is emitted)."""
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Mean time per output token after the first."""
+        if (self.first_token_at is None or self.finished_at is None
+                or len(self.tokens) < 2):
+            return None
+        return ((self.finished_at - self.first_token_at)
+                / (len(self.tokens) - 1))
+
 
 class Scheduler:
-    """Admission queue over a fixed slot pool backed by a PagePool.
+    """Priority admission over a fixed slot pool backed by a PagePool.
 
     Admission accounting is deliberately *tensor-parallel-invariant*: pages
     and budgets are counted in tokens, and under TP serving the KV pools
@@ -70,10 +112,20 @@ class Scheduler:
     `tp` is accepted purely to pin that contract with an assert (the engine
     separately verifies on the live buffers that no pool leaf is sharded
     along a page axis).
+
+    `age_promote`: waiting time (in whatever units `now` uses — scheduler
+    ticks under the virtual clock, seconds under a wall clock) after which
+    a batch request competes at interactive standing. None disables aging.
+    `preempt_hook(slot, req, now)`: engine callback that spills the
+    victim's KV and returns its SpillSnapshot; installing it enables
+    preemptive eviction.
     """
 
     def __init__(self, n_slots: int, pool: PagePool,
-                 prefix_share: bool = False, tp: int = 1):
+                 prefix_share: bool = False, tp: int = 1,
+                 age_promote: Optional[float] = None,
+                 preempt_hook: Optional[
+                     Callable[[int, Request, float], SpillSnapshot]] = None):
         # the page budget must not scale with tp: admission math is host-
         # side and token-denominated, so the block tables it hands the
         # engine must themselves be host arrays (replicated onto every
@@ -88,17 +140,38 @@ class Scheduler:
         self.pool = pool
         self.tp = tp
         self.prefix_share = prefix_share
+        self.age_promote = age_promote
+        self.preempt_hook = preempt_hook
         self._pending: list[Request] = []     # submitted, sorted by arrival
-        self.queue: deque[Request] = deque()  # arrived, waiting for a slot
+        self.queues: list[deque[Request]] = [deque() for _ in range(N_CLASSES)]
         self.slots: list[Optional[Request]] = [None] * n_slots
         self._retired: list[Request] = []
+        # admission/preemption event log: (event, now, rid, slot) tuples in
+        # decision order — "admit" | "restore" | "preempt" | "reject".
+        # The trace-replay tests assert exact sequences against this.
+        self.events: list[tuple] = []
+        self.n_preemptions = 0
+        self.n_restored = 0
+        self.n_rejected = 0
+        self.n_finished_ok = 0          # retired complete (not rejected)
+        self.n_finished_preempted = 0   # ... of which were evicted >= once
         # (rid, pool generation) -> shared pages of the blocked queue head,
         # so a head-of-line-blocked request doesn't re-hash its whole
         # prompt on every tick it spends waiting for pages
         self._hol_lookup: Optional[tuple[tuple[int, int], list[int]]] = None
 
     # ------------------------------------------------------------- intake
+    @property
+    def queue(self) -> list[Request]:
+        """All waiting requests, in admission-consideration order (class
+        then arrival). Kept as the single flat view callers iterate."""
+        return [r for q in self.queues for r in q]
+
     def submit(self, req: Request) -> None:
+        if not 0 <= req.priority < N_CLASSES:
+            raise ValueError(f"priority must be 0 (interactive) .. "
+                             f"{N_CLASSES - 1} (batch), got {req.priority}")
+        req._enqueued_at = req.arrival
         # insort (not re-sort): O(log n) to find the spot instead of an
         # O(n log n) full sort per call; ties keep submission order
         bisect.insort(self._pending, req, key=lambda r: r.arrival)
@@ -107,33 +180,122 @@ class Scheduler:
         i = bisect.bisect_right(self._pending, now,
                                 key=lambda r: r.arrival)
         if i:
-            self.queue.extend(self._pending[:i])
+            for req in self._pending[:i]:
+                self.queues[req.priority].append(req)
             del self._pending[:i]
 
     # ---------------------------------------------------------- admission
+    def _eff_priority(self, req: Request, now: float) -> int:
+        """Class the request competes in *right now*: its own, or
+        interactive once it has aged past the promotion threshold."""
+        if (self.age_promote is not None
+                and now - req._enqueued_at >= self.age_promote):
+            return INTERACTIVE
+        return req.priority
+
+    def _head(self, now: float, skipped=()) -> Optional[Request]:
+        """Best waiting candidate: lowest (effective class, arrival, rid).
+
+        Only queue *heads* compete — admission stays FIFO within a class,
+        and an aged batch head with an earlier arrival outranks a fresher
+        interactive head (that is what makes aging a starvation-freedom
+        guarantee rather than a cosmetic counter). `skipped` classes are
+        passed over (the idle-system deadlock valve in admit)."""
+        best, best_key = None, None
+        for cls, q in enumerate(self.queues):
+            if not q or cls in skipped:
+                continue
+            r = q[0]
+            key = (self._eff_priority(r, now), r.arrival, r.rid)
+            if best_key is None or key < best_key:
+                best, best_key = r, key
+        return best
+
+    def _pick_victim(self, candidate: Request, need_pages: bool,
+                     exclude=()) -> Optional[int]:
+        """Deterministic victim choice for preempting `candidate` in: the
+        latest-arriving running request of a strictly lower class (ties
+        broken by rid then slot). When the shortage is pages (not slots),
+        skip victims whose pages are all shared — spilling them frees
+        nothing and would churn KV for no headroom. `exclude` slots are
+        never victims: admit() passes the slots it filled *this call*,
+        whose requests the engine hasn't started yet — spilling one would
+        read slot mirrors the engine never initialized (and for a pending
+        restore, snapshot KV that was never scattered back)."""
+        best, best_key = None, None
+        for slot, req in enumerate(self.slots):
+            if req is None or req.priority <= candidate.priority:
+                continue
+            if slot in exclude:
+                continue
+            if need_pages and self.pool.slot_owned_pages(slot) == 0:
+                continue
+            key = (req.arrival, req.rid, slot)
+            if best_key is None or key > best_key:
+                best, best_key = slot, key
+        return best
+
+    def _admit_one(self, req: Request, slot: int, now: float,
+                   shared: list[int]) -> None:
+        self.queues[req.priority].remove(req)
+        req.queue_wait += now - req._enqueued_at
+        if req.spill is not None:
+            self.pool.restore(slot, req.spill)   # engine re-stitches data
+            self.n_restored += 1
+            self.events.append(("restore", now, req.rid, slot))
+        else:
+            self.pool.alloc(slot, req.budget, shared_pages=shared)
+            req.n_shared = len(shared) * self.pool.spec.page_size
+            req.admitted_at = now
+            self.events.append(("admit", now, req.rid, slot))
+        self.slots[slot] = req
+        req.slot = slot
+
+    def _preempt(self, slot: int, now: float) -> None:
+        """Evict the running request in `slot`: the engine hook spills its
+        KV (pool bookkeeping included), then the request re-queues at the
+        front of its own class, keeping its original arrival so it stays
+        ahead of everything that arrived after it."""
+        req = self.slots[slot]
+        assert req is not None and self.preempt_hook is not None
+        req.spill = self.preempt_hook(slot, req, now)
+        self.slots[slot] = None
+        req.slot = -1
+        req.n_preempts += 1
+        req._enqueued_at = now
+        self.queues[req.priority].appendleft(req)
+        self.n_preemptions += 1
+        self.events.append(("preempt", now, req.rid, slot))
+
     def admit(self, now: float = 0.0) -> list[tuple[int, Request]]:
-        """Admit FIFO requests into free slots while pages last.
+        """Admit waiting requests into free slots while pages last.
 
         Never raises for a submitted request: a budget wider than one
         block-table row can never be satisfied, so such a request is
         retired as ``rejected`` (instead of blocking the queue head
         forever or letting ``alloc`` raise mid-admit) and admission moves
-        on to the next request."""
+        on to the next request. Returns (slot, request) pairs in admission
+        order; a pair whose request has ``spill`` set is a *restore* — the
+        engine must re-stitch the spilled KV before stepping it."""
         self._ingest(now)
         out = []
-        free = [s for s, r in enumerate(self.slots) if r is None]
-        while self.queue and free:
-            req = self.queue[0]
+        skipped: set[int] = set()
+        while True:
+            req = self._head(now, skipped)
+            if req is None:
+                break
             if (self.pool.spec.pages_for(req.budget)
                     > self.pool.spec.max_pages):
-                self.queue.popleft()          # structurally impossible
+                self.queues[req.priority].remove(req)  # structurally impossible
                 req.rejected = True
                 req.done = True
                 req.finished_at = now
+                self.n_rejected += 1
+                self.events.append(("reject", now, req.rid, -1))
                 self._retired.append(req)
                 continue
             shared: list[int] = []
-            if self.prefix_share:
+            if self.prefix_share and req.spill is None:
                 state = (req.rid, self.pool.generation)
                 if self._hol_lookup and self._hol_lookup[0] == state:
                     shared = self._hol_lookup[1]
@@ -142,16 +304,34 @@ class Scheduler:
                     # runs inside alloc, and new entries bump generation
                     shared = self.pool.lookup_prefix(req.prompt)
                     self._hol_lookup = (state, shared)
-            if not self.pool.can_alloc(req.budget, shared_pages=shared):
-                break                         # head-of-line blocks on pages
-            self.queue.popleft()
-            slot = free.pop(0)
-            self.pool.alloc(slot, req.budget, shared_pages=shared)
-            req.n_shared = len(shared) * self.pool.spec.page_size
-            self.slots[slot] = req
-            req.slot = slot
-            req.admitted_at = now
-            out.append((slot, req))
+            free = [s for s, r in enumerate(self.slots) if r is None]
+            fits = (self.pool.can_restore(req.spill) if req.spill is not None
+                    else self.pool.can_alloc(req.budget, shared_pages=shared))
+            if free and fits:
+                slot = free[0]
+                self._admit_one(req, slot, now, shared)
+                out.append((slot, req))
+                continue
+            # blocked: a true interactive head may evict a batch victim.
+            # Aged batch heads have admission standing but no preemption
+            # rights (batch churning batch buys nothing), and each evicted
+            # victim either opens the way or we run out of victims.
+            if (self.preempt_hook is not None
+                    and req.priority == INTERACTIVE):
+                victim = self._pick_victim(req, need_pages=bool(free),
+                                           exclude={s for s, _ in out})
+                if victim is not None:
+                    self._preempt(victim, now)
+                    continue
+            if not any(r is not None for r in self.slots) and not out:
+                # deadlock valve: the whole system is idle, so no retire
+                # will ever free the pages this head is waiting for (spill
+                # snapshots can pin pages with nothing running). Strict
+                # priority blocking would spin forever — let another
+                # class's head through instead of stalling the pool.
+                skipped.add(req.priority)   # the queue it sits in
+                continue
+            break                     # head-of-line blocks on slots/pages
         return out
 
     def retire(self, slot: int, now: float = 0.0) -> None:
@@ -162,6 +342,9 @@ class Scheduler:
         req.done = True
         req.finished_at = now
         req.slot = -1
+        self.n_finished_ok += 1
+        if req.n_preempts:
+            self.n_finished_preempted += 1
         self._retired.append(req)
 
     # ------------------------------------------------------------- status
@@ -169,7 +352,7 @@ class Scheduler:
         return [s for s, r in enumerate(self.slots) if r is not None]
 
     def all_done(self) -> bool:
-        return (not self._pending and not self.queue
+        return (not self._pending and not any(self.queues)
                 and all(r is None for r in self.slots))
 
     @property
@@ -178,6 +361,23 @@ class Scheduler:
 
     def drain_finished(self) -> list[Request]:
         """Pop everything retired since the last drain (engine.run uses this
-        so back-to-back drains don't re-report earlier batches)."""
+        so back-to-back drains don't re-report earlier batches). Rejected
+        requests ride along flagged ``rejected``; requests that were
+        preempted mid-run carry ``n_preempts`` / accumulated ``queue_wait``
+        — `stats()` separates the two populations."""
         out, self._retired = self._retired, []
         return out
+
+    def stats(self) -> dict:
+        """Rejected-vs-preempted accounting, cumulative across drains:
+        `n_rejected` counts structurally-impossible requests retired
+        unserved, `n_finished_preempted` counts requests that completed
+        *despite* being evicted mid-run — the two populations a
+        drain_finished caller must not conflate."""
+        return {
+            "n_preemptions": self.n_preemptions,
+            "n_restored": self.n_restored,
+            "n_rejected": self.n_rejected,
+            "n_finished_ok": self.n_finished_ok,
+            "n_finished_preempted": self.n_finished_preempted,
+        }
