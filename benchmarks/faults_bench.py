@@ -1,0 +1,207 @@
+"""Fault tolerance: snapshot/restore cost, goodput under injected
+faults, and the fused->gather fallback overhead.
+
+Everything runs the seeded traffic harness under the virtual clock, so
+the fault schedule, the crash point, and every counter are deterministic
+and machine-independent; only the wall-clock timings vary by host.
+
+  snapshot   — full-engine snapshot()/restore() latency and the on-disk
+               round trip through checkpoint.store, at two engine sizes
+               (the cost scales with KV pool bytes, not request count).
+  goodput    — the same bursty trace fault-free vs under a seeded chaos
+               schedule (NaN logits, pool exhaustion, kernel faults,
+               corrupt spills, latency spikes, one mid-trace crash
+               recovered from snapshot). Requests the faults never
+               touched are asserted token-identical to the baseline.
+  fallback   — trace wall time on the fused paged-attention path vs the
+               same trace with an injected kernel fault forcing the
+               mid-trace downgrade to the gather oracle; token streams
+               are asserted identical (gather is the kernel's oracle).
+
+Writes BENCH_faults.json:
+
+    PYTHONPATH=src:. python benchmarks/faults_bench.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import load_snapshot, save_snapshot
+from repro.configs import TINY
+from repro.models.transformer import init_lm
+from repro.serve import traffic
+from repro.serve.engine import ContinuousEngine
+from repro.serve.faults import FaultPlan, run_resilient
+
+PAGE_SIZE = 8
+SEED = 7
+CHAOS_SEED = 3
+OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "BENCH_faults.json")
+
+
+def make_trace(cfg, n=16):
+    return traffic.make_trace(
+        kind="bursty", n=n, rate=1.0, seed=SEED,
+        vocab_size=cfg.vocab_size, prompt_len=(8, 16), max_new=(4, 12),
+        batch_frac=0.5, burst_len=1.0, idle_len=8.0, burst_rate_mult=8.0)
+
+
+def _engine(cfg, params, *, n_slots=2, n_pages=24, max_len=64, **kw):
+    return ContinuousEngine(cfg, params, n_slots=n_slots, max_len=max_len,
+                            page_size=PAGE_SIZE, prefill_bucket=8,
+                            n_pages=n_pages, preempt=True,
+                            age_promote=200.0, **kw)
+
+
+def _snap_bytes(obj) -> int:
+    if isinstance(obj, np.ndarray):
+        return obj.nbytes
+    if isinstance(obj, dict):
+        return sum(_snap_bytes(v) for v in obj.values())
+    if isinstance(obj, (list, tuple)):
+        return sum(_snap_bytes(v) for v in obj)
+    return 0
+
+
+def _time(fn, iters=5):
+    fn()                                    # warm (compiles, first sync)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e3     # ms
+
+
+def bench_snapshot(cfg, params):
+    """snapshot()/restore() and the disk round trip vs engine size."""
+    out = {}
+    for name, kw in (("2slots_24pages", dict(n_slots=2, n_pages=24)),
+                     ("4slots_96pages", dict(n_slots=4, n_pages=96,
+                                             max_len=128))):
+        eng = _engine(cfg, params, **kw)
+        for it in make_trace(cfg, n=6):
+            eng.submit(it.prompt, max_new=it.max_new, arrival=it.arrival,
+                       priority=it.priority)
+        for _ in range(4):                  # mid-trace state, not step 0
+            eng.step(float(eng.t))
+            eng.t += 1
+        snap = eng.snapshot()
+        fresh = _engine(cfg, params, **kw)
+        with tempfile.TemporaryDirectory() as tmp:
+            path = os.path.join(tmp, "snap")
+            out[name] = {
+                "kv_pool_bytes": _snap_bytes(snap["cache"]),
+                "snapshot_bytes": _snap_bytes(snap),
+                "snapshot_ms": _time(eng.snapshot),
+                "restore_ms": _time(lambda: fresh.restore(snap)),
+                "save_ms": _time(lambda: save_snapshot(path, snap)),
+                "load_ms": _time(lambda: load_snapshot(path)),
+            }
+        fresh.run(max_steps=100_000)        # restored engine must drain
+        fresh.pool.check_invariants()
+    return out
+
+
+def bench_goodput(cfg, params, trace):
+    """Fault-free vs seeded chaos on the same trace; survivors must be
+    token-identical."""
+    base_eng = _engine(cfg, params, max_len=64)
+    base = traffic.replay(base_eng, trace, max_steps=200_000)
+    want = {r.rid: list(r.tokens) for r in base["requests"]}
+
+    plan = FaultPlan.seeded(CHAOS_SEED, n_steps=40, n_slots=2, n_faults=5,
+                            crashes=1)
+    res = run_resilient(lambda: _engine(cfg, params, max_len=64), trace,
+                        faults=plan, snapshot_every=8, max_steps=200_000)
+    rep = res["report"]
+    untouched = [r for r in res["requests"]
+                 if not (r.error or r.shed or r.cancelled or r.n_preempts)]
+    for r in untouched:
+        assert list(r.tokens) == want[r.rid], \
+            f"fault schedule perturbed untouched request {r.rid}"
+    res["engine"].pool.check_invariants()
+    strip = lambda rp: {k: v for k, v in rp.items() if k != "requests"}
+    return {
+        "fault_free": strip(base),
+        "chaos": strip(rep),
+        "n_crashes": res["n_crashes"],
+        "n_snapshots": res["n_snapshots"],
+        "goodput_tok_per_step": {
+            "fault_free": base["overall"]["goodput_tok_per_t"],
+            "chaos": rep["overall"]["goodput_tok_per_t"]},
+        "survivors_token_identical": len(untouched),
+    }
+
+
+def bench_fallback(cfg, params, trace):
+    """Wall time fused vs mid-trace fused->gather downgrade."""
+    from repro.serve.faults import Fault
+
+    def drive(faults):
+        eng = _engine(cfg, params, max_len=64, paged_attn="fused",
+                      faults=faults)
+        for it in trace:
+            eng.submit(it.prompt, max_new=it.max_new, arrival=it.arrival,
+                       priority=it.priority)
+        eng.run(max_steps=200_000)          # warm compile both paths
+        t0 = time.perf_counter()
+        eng2 = _engine(cfg, params, max_len=64, paged_attn="fused",
+                       faults=faults)
+        reqs = [eng2.submit(it.prompt, max_new=it.max_new,
+                            arrival=it.arrival, priority=it.priority)
+                for it in trace]
+        eng2.run(max_steps=200_000)
+        dt = time.perf_counter() - t0
+        return dt, {r.rid: list(r.tokens) for r in reqs}, eng2
+
+    t_fused, toks_fused, _ = drive(None)
+    plan = FaultPlan([Fault(step=2, kind="kernel_fault")])
+    t_fall, toks_fall, eng = drive(plan)
+    assert toks_fused == toks_fall, "fallback changed greedy tokens"
+    assert eng.n_kernel_fallbacks == 1
+    assert eng.cfg.paged_attn_impl == "gather"
+    return {"fused_s": t_fused, "fallback_s": t_fall,
+            "overhead_x": t_fall / t_fused if t_fused else None,
+            "tokens_identical": True}
+
+
+def run():
+    cfg = TINY
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    trace = make_trace(cfg)
+
+    result = {
+        "workload": {"n_requests": len(trace), "page_size": PAGE_SIZE,
+                     "trace": "bursty", "seed": SEED,
+                     "chaos_seed": CHAOS_SEED},
+        "snapshot": bench_snapshot(cfg, params),
+        "goodput": bench_goodput(cfg, params, trace),
+        "fallback": bench_fallback(cfg, params, trace),
+    }
+    with open(OUT, "w") as f:
+        json.dump(result, f, indent=2)
+    for name, s in result["snapshot"].items():
+        print(f"snapshot[{name}]: {s['snapshot_bytes'] / 1e6:.1f} MB, "
+              f"snap {s['snapshot_ms']:.1f} ms / restore "
+              f"{s['restore_ms']:.1f} ms, disk {s['save_ms']:.1f}/"
+              f"{s['load_ms']:.1f} ms")
+    g = result["goodput"]
+    print(f"goodput tok/step: fault-free "
+          f"{g['goodput_tok_per_step']['fault_free']:.2f} vs chaos "
+          f"{g['goodput_tok_per_step']['chaos']:.2f} "
+          f"({g['n_crashes']} crash, {g['n_snapshots']} snapshots, "
+          f"{g['survivors_token_identical']} survivors token-identical)")
+    f_ = result["fallback"]
+    print(f"fallback: fused {f_['fused_s']:.2f}s vs downgraded "
+          f"{f_['fallback_s']:.2f}s ({f_['overhead_x']:.2f}x) -> {OUT}")
+    return result
+
+
+if __name__ == "__main__":
+    run()

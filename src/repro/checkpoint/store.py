@@ -78,6 +78,105 @@ def save_tree(path: str, tree: Any, extra_meta: dict | None = None) -> None:
             shutil.rmtree(tmp, ignore_errors=True)
 
 
+# ------------------------------------------------------- engine snapshots
+#
+# ContinuousEngine.snapshot() returns an arbitrary nested structure — dicts
+# with non-string (slot/rid) keys, tuples (event-log entries, fingerprint
+# geometry), bytes, numpy arrays at any depth, None, scalars. save_tree's
+# slash-path flattening can't represent that, so snapshots get their own
+# codec: arrays are pulled into one npz (bfloat16 stored as a uint16 view —
+# npz can't serialize ml_dtypes), and everything else becomes a tagged JSON
+# manifest that decodes back to the exact same structure, key types and
+# tuple-ness included. Atomicity matches save_tree (tmp dir + rename).
+
+_ND, _TUP, _BYTES, _ITEMS, _BF16 = ("__nd__", "__tuple__", "__bytes__",
+                                    "__items__", "bfloat16")
+
+
+def _snap_encode(obj: Any, arrays: list) -> Any:
+    if isinstance(obj, (jax.Array, np.ndarray)):
+        arrays.append(np.asarray(obj))
+        return {_ND: len(arrays) - 1}
+    if isinstance(obj, np.generic):
+        return _snap_encode(obj.item(), arrays)
+    if isinstance(obj, bytes):
+        return {_BYTES: obj.hex()}
+    if isinstance(obj, tuple):
+        return {_TUP: [_snap_encode(v, arrays) for v in obj]}
+    if isinstance(obj, list):
+        return [_snap_encode(v, arrays) for v in obj]
+    if isinstance(obj, dict):
+        # key-value pair list: keys keep their type (int slot/rid keys
+        # must not come back as strings)
+        return {_ITEMS: [[_snap_encode(k, arrays), _snap_encode(v, arrays)]
+                         for k, v in obj.items()]}
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    raise TypeError(f"snapshot codec cannot serialize {type(obj)!r}")
+
+
+def _snap_decode(obj: Any, arrays: dict) -> Any:
+    if isinstance(obj, dict):
+        if _ND in obj:
+            return arrays[f"a{obj[_ND]}"]
+        if _BYTES in obj:
+            return bytes.fromhex(obj[_BYTES])
+        if _TUP in obj:
+            return tuple(_snap_decode(v, arrays) for v in obj[_TUP])
+        assert set(obj) == {_ITEMS}, f"unknown snapshot node {set(obj)}"
+        return {_snap_decode(k, arrays): _snap_decode(v, arrays)
+                for k, v in obj[_ITEMS]}
+    if isinstance(obj, list):
+        return [_snap_decode(v, arrays) for v in obj]
+    return obj
+
+
+def save_snapshot(path: str, snap: Any) -> None:
+    """Serialize an engine snapshot to a directory, atomically."""
+    import ml_dtypes
+
+    arrays: list = []
+    manifest = _snap_encode(snap, arrays)
+    named, dtypes = {}, {}
+    for i, a in enumerate(arrays):
+        if a.dtype == ml_dtypes.bfloat16:
+            dtypes[f"a{i}"] = _BF16
+            a = a.view(np.uint16)
+        named[f"a{i}"] = a
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=os.path.dirname(path) or ".",
+                           prefix=".snap_tmp_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **named)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"manifest": manifest, "dtypes": dtypes,
+                       "format": "engine-snapshot-v1"}, f)
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp, ignore_errors=True)
+
+
+def load_snapshot(path: str) -> Any:
+    """Inverse of save_snapshot: the exact structure snapshot() returned."""
+    import ml_dtypes
+
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    assert meta.get("format") == "engine-snapshot-v1", \
+        f"{path}: not an engine snapshot"
+    npz = np.load(os.path.join(path, "arrays.npz"))
+    arrays = {}
+    for k in npz.files:
+        a = npz[k]
+        if meta["dtypes"].get(k) == _BF16:
+            a = a.view(ml_dtypes.bfloat16)
+        arrays[k] = a
+    return _snap_decode(meta["manifest"], arrays)
+
+
 def load_tree(path: str) -> tuple[Any, dict]:
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)

@@ -178,6 +178,27 @@ def _paged_tile(page_size: int) -> int:
     return _pick_block(page_size, _PAGE_TILE)
 
 
+# trace-time pallas -> reference fallbacks, per op name. A kernel that fails
+# to *lower* (bad tile regime on an exotic shape, backend gap) raises while
+# the jit is being traced — serving can survive that by building the
+# reference path into the same computation instead. The counter makes the
+# degradation observable; REPRO_STRICT_KERNELS=1 (set in the kernel-parity
+# CI job) disables the net so a broken kernel fails loudly there, never
+# silently passing parity via its own oracle.
+DISPATCH_FALLBACKS: dict[str, int] = {"paged_attention": 0,
+                                      "paged_attention_verify": 0}
+
+
+def _kernel_fallback(name: str, kernel_fn, ref_fn):
+    try:
+        return kernel_fn()
+    except Exception:
+        if os.environ.get("REPRO_STRICT_KERNELS") == "1":
+            raise
+        DISPATCH_FALLBACKS[name] += 1
+        return ref_fn()
+
+
 def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     block_table: jax.Array, kv_len: jax.Array, *,
                     k_scale_pool=None, v_scale_pool=None, window=None,
@@ -205,9 +226,15 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                                     k_scale_pool, v_scale_pool,
                                     window=window, tile=tile)
     else:
-        o = paged_attention_pallas(qg, k_pool, v_pool, block_table, kv_len,
-                                   k_scale_pool, v_scale_pool, window=window,
-                                   tile=tile, interpret=_interpret())
+        o = _kernel_fallback(
+            "paged_attention",
+            lambda: paged_attention_pallas(
+                qg, k_pool, v_pool, block_table, kv_len, k_scale_pool,
+                v_scale_pool, window=window, tile=tile,
+                interpret=_interpret()),
+            lambda: ref.paged_attention_ref(
+                qg, k_pool, v_pool, block_table, kv_len, k_scale_pool,
+                v_scale_pool, window=window, tile=tile))
     return o.reshape(s, h, v_pool.shape[-1]).astype(out_dtype or q.dtype)
 
 
@@ -235,10 +262,15 @@ def paged_attention_verify(q: jax.Array, k_pool: jax.Array,
                                     k_scale_pool, v_scale_pool,
                                     window=window, tile=tile, m_rows=m)
     else:
-        o = paged_attention_pallas(qg, k_pool, v_pool, block_table, kv_len,
-                                   k_scale_pool, v_scale_pool, window=window,
-                                   tile=tile, m_rows=m,
-                                   interpret=_interpret())
+        o = _kernel_fallback(
+            "paged_attention_verify",
+            lambda: paged_attention_pallas(
+                qg, k_pool, v_pool, block_table, kv_len, k_scale_pool,
+                v_scale_pool, window=window, tile=tile, m_rows=m,
+                interpret=_interpret()),
+            lambda: ref.paged_attention_ref(
+                qg, k_pool, v_pool, block_table, kv_len, k_scale_pool,
+                v_scale_pool, window=window, tile=tile, m_rows=m))
     hd_v = v_pool.shape[-1]
     o = o.reshape(s, kvh, m, g, hd_v).transpose(0, 2, 1, 3, 4)
     return o.reshape(s, m, h, hd_v).astype(out_dtype or q.dtype)

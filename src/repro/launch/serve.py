@@ -22,6 +22,15 @@ and the summary reports per-class TTFT/TPOT percentiles, goodput, and
 the preemption/spill counters. `--virtual-clock` drives the run on the
 deterministic step clock instead of wall time (same seed, same numbers,
 every machine).
+
+Fault tolerance (serve/faults.py): `--deadline T` gives every request an
+SLO of T time units after arrival (missed = shed from the queue or
+cancelled mid-run), `--faults SEED` injects a seeded chaos schedule —
+NaN logits, pool exhaustion, kernel faults, corrupt spills, latency
+spikes, plus one crash recovered from the latest snapshot — and
+`--snapshot-every N` checkpoints the full engine state every N steps.
+The report then carries shed/cancelled/quarantined columns and the
+fault counters.
 """
 from __future__ import annotations
 
@@ -39,6 +48,7 @@ from repro.distributed.sharding import sharding_ctx
 from repro.models.transformer import init_lm
 from repro.serve import traffic
 from repro.serve.engine import ContinuousEngine, ServeEngine
+from repro.serve.faults import FaultPlan, run_resilient
 from repro.utils.tree import tree_size_bytes
 
 
@@ -77,7 +87,8 @@ def make_workload(cfg, args):
         batch_frac=args.batch_frac,
         burst_len=args.burst_len, idle_len=args.idle_len,
         burst_rate_mult=args.burst_rate_mult,
-        shared_prefix=args.shared_prefix)
+        shared_prefix=args.shared_prefix,
+        deadline=args.deadline)
 
 
 def run_continuous(cfg, params, work, args):
@@ -86,65 +97,100 @@ def run_continuous(cfg, params, work, args):
     plen_max = max(len(it.prompt) for it in work)
     bucket_up = -(-plen_max // args.prefill_bucket) * args.prefill_bucket
     max_len = bucket_up + args.max_new_max
-    eng = ContinuousEngine(cfg, params, n_slots=args.slots,
-                           max_len=max_len, page_size=args.page_size,
-                           prefill_bucket=args.prefill_bucket,
-                           paged_attn=args.paged_attn,
-                           prefix_share=args.prefix_share,
-                           chunked_prefill=args.chunked_prefill,
-                           tp=args.tp, spec_decode=args.spec_decode,
-                           draft_bits=args.draft_bits, spec_k=args.spec_k,
-                           preempt=args.preempt,
-                           age_promote=args.age_promote)
-    if args.tp > 1:
-        rep = eng.tp_placement_report()
-        print(f"tensor-parallel x{args.tp}: params "
-              f"{rep['params']['per_device_bytes'] / 1e6:.1f} MB/device "
-              f"(global {rep['params']['global_bytes'] / 1e6:.1f} MB), "
-              f"KV pools {rep['kv']['per_device_bytes'] / 1e6:.1f} MB/device")
-        assert not rep["replicated_quant_leaves"], \
-            rep["replicated_quant_leaves"]
-    # warm the jit caches — every prefill bucket in the workload, decoded
-    # both shallow and to full depth so the common (k, width) decode-scan
-    # shapes compile before timing (odd depth/remaining combos in the real
-    # traffic can still hit a fresh shape mid-run)
-    buckets = sorted({eng._bucket(len(it.prompt)) for it in work})
-    waves = 2 if args.prefix_share else 1
-    shared_floor = ((args.shared_prefix // args.page_size) * args.page_size
-                    if args.prefix_share else 0)
-    for wave in range(waves):
-        # with prefix sharing, the first wave registers its prompts and a
-        # second wave prefix-hits exactly the system-prefix floor (its
-        # tails differ, like real traffic), compiling the gathered-context
-        # suffix-prefill shapes the timed run will take
-        for b in buckets:
-            for mn in {2, args.max_new_max}:
-                p = np.zeros(b, np.int64)
-                if wave > 0 and 0 < shared_floor < b:
-                    p[shared_floor:] = 1
-                eng.submit(p, max_new=mn)
-        eng.run(max_steps=10_000)
-    print(f"warmed {len(buckets)} prefill buckets "
-          f"({waves} wave{'s' if waves > 1 else ''}): {buckets}")
-    # report the timed run only: reset the counters and drop the warm-up
-    # prompts' cache registrations, so cached-page stats and eviction
-    # behaviour reflect measured traffic alone
-    eng.n_decode_steps = eng.n_prefills = 0
-    eng.n_prefill_tokens = eng.n_shared_tokens = 0
-    eng.n_spilled_pages = eng.n_restored_pages = 0
-    eng.sched.events.clear()
-    eng.sched.n_preemptions = eng.sched.n_restored = eng.sched.n_rejected = 0
-    eng.sched.n_finished_ok = eng.sched.n_finished_preempted = 0
-    if args.spec_decode:
-        eng.n_spec_rounds = eng.n_draft_tokens = eng.n_spec_emitted = 0
-        eng.spec_accept_sum[:] = 0
-        eng.spec_round_count[:] = 0
-    eng.pool.clear_prefix_cache()
 
-    t0 = time.time()
-    clock = None if args.virtual_clock else (lambda: time.time() - t0)
-    report = traffic.replay(eng, work, clock=clock, max_steps=1_000_000)
-    dt = time.time() - t0
+    def build():
+        # also run_resilient's crash-recovery constructor: a rebuilt
+        # engine must warm and reset identically to the first one (the
+        # jit caches themselves are process-global, so only the first
+        # build pays the compiles)
+        eng = ContinuousEngine(cfg, params, n_slots=args.slots,
+                               max_len=max_len, page_size=args.page_size,
+                               prefill_bucket=args.prefill_bucket,
+                               paged_attn=args.paged_attn,
+                               prefix_share=args.prefix_share,
+                               chunked_prefill=args.chunked_prefill,
+                               tp=args.tp, spec_decode=args.spec_decode,
+                               draft_bits=args.draft_bits,
+                               spec_k=args.spec_k,
+                               preempt=args.preempt,
+                               age_promote=args.age_promote)
+        if args.tp > 1:
+            rep = eng.tp_placement_report()
+            print(f"tensor-parallel x{args.tp}: params "
+                  f"{rep['params']['per_device_bytes'] / 1e6:.1f} MB/device "
+                  f"(global {rep['params']['global_bytes'] / 1e6:.1f} MB), "
+                  f"KV pools "
+                  f"{rep['kv']['per_device_bytes'] / 1e6:.1f} MB/device")
+            assert not rep["replicated_quant_leaves"], \
+                rep["replicated_quant_leaves"]
+        # warm the jit caches — every prefill bucket in the workload,
+        # decoded both shallow and to full depth so the common (k, width)
+        # decode-scan shapes compile before timing (odd depth/remaining
+        # combos in the real traffic can still hit a fresh shape mid-run)
+        buckets = sorted({eng._bucket(len(it.prompt)) for it in work})
+        waves = 2 if args.prefix_share else 1
+        shared_floor = ((args.shared_prefix // args.page_size)
+                        * args.page_size if args.prefix_share else 0)
+        for wave in range(waves):
+            # with prefix sharing, the first wave registers its prompts
+            # and a second wave prefix-hits exactly the system-prefix
+            # floor (its tails differ, like real traffic), compiling the
+            # gathered-context suffix-prefill shapes the timed run takes
+            for b in buckets:
+                for mn in {2, args.max_new_max}:
+                    p = np.zeros(b, np.int64)
+                    if wave > 0 and 0 < shared_floor < b:
+                        p[shared_floor:] = 1
+                    eng.submit(p, max_new=mn)
+            eng.run(max_steps=10_000)
+        print(f"warmed {len(buckets)} prefill buckets "
+              f"({waves} wave{'s' if waves > 1 else ''}): {buckets}")
+        # report the timed run only: reset the counters, the virtual
+        # clock, and the step index (fault plans are step-indexed), and
+        # drop the warm-up prompts' cache registrations, so stats and
+        # injected faults reflect measured traffic alone
+        eng.t = 0
+        eng.n_steps_total = 0
+        eng.n_decode_steps = eng.n_prefills = 0
+        eng.n_prefill_tokens = eng.n_shared_tokens = 0
+        eng.n_spilled_pages = eng.n_restored_pages = 0
+        eng.sched.events.clear()
+        eng.sched.n_preemptions = eng.sched.n_restored = 0
+        eng.sched.n_rejected = 0
+        eng.sched.n_finished_ok = eng.sched.n_finished_preempted = 0
+        eng.sched.n_shed = eng.sched.n_cancelled = 0
+        eng.sched.n_quarantined = 0
+        if args.spec_decode:
+            eng.n_spec_rounds = eng.n_draft_tokens = eng.n_spec_emitted = 0
+            eng.spec_accept_sum[:] = 0
+            eng.spec_round_count[:] = 0
+        eng.pool.clear_prefix_cache()
+        return eng
+
+    if args.faults is not None or args.snapshot_every > 0:
+        # fault injection and periodic snapshotting run under the
+        # deterministic step clock (fault plans are step-indexed and a
+        # crash-restored engine replays virtual time, not wall time);
+        # dt includes the (first) warm-up — run_resilient owns building
+        plan = (FaultPlan.seeded(args.faults, n_steps=max(64, 4 * len(work)),
+                                 n_slots=args.slots, crashes=1)
+                if args.faults is not None else None)
+        t0 = time.time()
+        res = run_resilient(build, work, faults=plan,
+                            snapshot_every=args.snapshot_every,
+                            max_steps=1_000_000)
+        dt = time.time() - t0
+        eng, report = res["engine"], res["report"]
+        print(f"resilient: {res['n_crashes']} crash(es) recovered from "
+              f"snapshot, {res['n_snapshots']} periodic snapshots"
+              + (f", fault plan {plan!r}" if plan is not None else ""))
+    else:
+        eng = build()
+        t0 = time.time()
+        clock = None if args.virtual_clock else (lambda: time.time() - t0)
+        report = traffic.replay(eng, work, clock=clock,
+                                max_steps=1_000_000)
+        dt = time.time() - t0
     done = report["requests"]
     total_tok = sum(len(r.tokens) for r in done)
     print(f"continuous: {len(done)} requests, {total_tok} tokens in {dt:.2f}s "
@@ -161,8 +207,9 @@ def run_continuous(cfg, params, work, args):
               f"{sp['restored_pages']} restored), "
               f"{sc['n_rejected']} rejected, "
               f"{sc['n_finished_preempted']} finished after preemption")
-    print(traffic.format_report(
-        report, unit="steps" if args.virtual_clock else "s"))
+    virtual = (args.virtual_clock or args.faults is not None
+               or args.snapshot_every > 0)
+    print(traffic.format_report(report, unit="steps" if virtual else "s"))
     if args.spec_decode:
         st = eng.spec_stats()
         print(f"  spec     {st['rounds']} rounds, {st['draft_tokens']} draft "
@@ -231,6 +278,20 @@ def main():
     ap.add_argument("--age-promote", type=float, default=None,
                     help="promote a batch request to interactive priority "
                          "after waiting this long (starvation bound)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request SLO: shed from the queue or cancel "
+                         "mid-run any request still unfinished this many "
+                         "time units after its arrival")
+    ap.add_argument("--faults", type=int, default=None, metavar="SEED",
+                    help="inject a seeded chaos schedule (nan logits, pool "
+                         "exhaustion, kernel faults, corrupt spills, "
+                         "latency spikes, one crash) and serve through it "
+                         "via the crash-recovery driver; implies the "
+                         "virtual clock")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="snapshot the full engine state every N steps "
+                         "(0 = off); with --faults the crash recovers "
+                         "from the latest snapshot")
     ap.add_argument("--virtual-clock", action="store_true",
                     help="drive the run on the deterministic step clock "
                          "instead of wall time")

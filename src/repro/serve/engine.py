@@ -42,6 +42,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
+import zlib
 from typing import Optional, Sequence
 
 import jax
@@ -57,6 +59,7 @@ from repro.distributed.sharding import TP_AXIS, sharding_ctx
 from repro.models.config import ModelConfig
 from repro.models.transformer import (init_cache, lm_decode, lm_forward,
                                       lm_prefill, lm_verify)
+from repro.serve.faults import FaultInjected, FaultPlan
 from repro.serve.kvcache import (POOL_KEYS, PagePool, PageSpec,
                                  default_page_spec, paged_pool_pspecs,
                                  pool_head_dim)
@@ -167,9 +170,12 @@ def _sample_first_jit(logits, keys, *, temperature, top_k):
     Each row draws from its own key (folded from the request id by the
     engine), so the result does not depend on how admitted requests were
     grouped into prefill batches — the same seed gives the same tokens at
-    prefill_batch=1 and prefill_batch=8."""
-    return jax.vmap(lambda l, k: sample(l[None], k, temperature=temperature,
+    prefill_batch=1 and prefill_batch=8. Also returns the per-row isfinite
+    sentinel so a prompt whose prefill produced non-finite logits is
+    quarantined before it ever enters the decode set."""
+    toks = jax.vmap(lambda l, k: sample(l[None], k, temperature=temperature,
                                         top_k=top_k)[0])(logits, keys)
+    return toks, jnp.all(jnp.isfinite(logits), axis=-1)
 
 
 # ------------------------------------------------------ KV spill / restore
@@ -187,6 +193,45 @@ def _pool_page_axis(key: str, ndim: int) -> int:
     """Page axis of a paged pool leaf: two dims left of the kv-head dim
     (pool layout ... P, page_size, KVH[, hd])."""
     return pool_head_dim(key, ndim) - 2
+
+
+def _tree_checksum(tree) -> int:
+    """crc32 over every array leaf of a (nested-dict) host tree, walked in
+    sorted-key order so the digest is layout-stable. Cheap enough to run on
+    every spill (host RAM bandwidth, no device sync) and catches the
+    corruption class that matters: bytes flipped while a snapshot sits in
+    host memory awaiting restore."""
+    crc = 0
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            crc = zlib.crc32(str(k).encode(), crc)
+            crc = zlib.crc32(_tree_checksum(tree[k]).to_bytes(4, "little"),
+                             crc)
+        return crc
+    if tree is None:
+        return 0
+    arr = np.ascontiguousarray(np.asarray(tree))
+    return zlib.crc32(arr.tobytes(), zlib.crc32(str(arr.dtype).encode()))
+
+
+def _corrupt_first_leaf(tree):
+    """Flip one byte of the first array leaf (sorted-key walk) — the
+    spill_corrupt fault's payload damage. Returns (new_tree, corrupted)."""
+    if isinstance(tree, dict):
+        out, hit = {}, False
+        for k in sorted(tree):
+            if hit:
+                out[k] = tree[k]
+            else:
+                out[k], hit = _corrupt_first_leaf(tree[k])
+        # preserve original (insertion) key order of the input dict
+        return {k: out[k] for k in tree}, hit
+    if tree is None:
+        return tree, False
+    arr = np.asarray(tree).copy()
+    flat = arr.view(np.uint8).reshape(-1)
+    flat[0] ^= 0xFF
+    return arr, True
 
 
 @jax.jit
@@ -219,49 +264,72 @@ def _spill_scatter_jit(cache, idx, host):
 
 def _decode_scan(cfg, params, cache, last_tok, cur_len, active,
                  block_table, key, *, k_steps, page_size,
-                 temperature, top_k, with_logits=False):
+                 temperature, top_k, with_logits=False, poison=None):
     """K fused decode steps over all slots with on-device sampling.
 
     One dispatch and one host sync per K tokens — the per-step Python/
     transfer overhead of a step-at-a-time loop would otherwise rival the
     model compute. Slots whose request finishes mid-block keep stepping;
     their extra writes fall off the block table onto the scratch page and
-    the host drops the surplus tokens. Returns ((K, S) tokens, cache) —
-    or ((K, S) tokens, (K, S, V) logits, cache) under `with_logits`, for
-    the speculative draft whose temperature>0 acceptance rule needs the
-    distribution each proposal was sampled from.
+    the host drops the surplus tokens. Returns ((K, S) tokens, (K, S)
+    alive, cache) — or ((K, S) tokens, (K, S, V) logits, (K, S) alive,
+    cache) under `with_logits`, for the speculative draft whose
+    temperature>0 acceptance rule needs the distribution each proposal was
+    sampled from.
+
+    The alive mask is the graceful-degradation sentinel: one cheap (S,)
+    isfinite reduction over each step's logits. A slot whose logits go
+    non-finite is *deactivated inside the scan* — its token freezes, its
+    fill count stops, and its rows stop feeding the model — so a poisoned
+    slot cannot perturb co-batched slots through cross-token paths
+    (capacity-MoE routing) on later steps of the same block. The host
+    reads alive, drops the garbage token, and quarantines the request.
+    `poison` (S,) bool is the fault-injection hook: marked slots get NaN
+    logits on the first step, exercising exactly the real failure path.
+
     Shared by the single-device jit and the shard_map TP jit below — under
     TP, `cfg` is the head-localized per-shard view and `params`/`cache`
     are the shard-local slices (tokens, lengths, tables, key replicated).
     """
     n_slots, max_pages = block_table.shape
     sl = jnp.arange(n_slots)
+    if poison is None:
+        poison = jnp.zeros(n_slots, bool)
 
-    def body(carry, _):
-        cache, tok, clen, key = carry
+    def body(carry, first):
+        cache, tok, clen, key, alive = carry
+        act = active & alive
         key, sk = jax.random.split(key)
         page_idx = jnp.clip(clen // page_size, 0, max_pages - 1)
         paged = {
             "block_table": block_table,
             "write_page": jnp.where(
-                active, jnp.maximum(block_table[sl, page_idx], 0), 0),
-            "write_off": jnp.where(active, clen % page_size, 0),
-            "kv_len": jnp.where(active, clen + 1, 0),
+                act, jnp.maximum(block_table[sl, page_idx], 0), 0),
+            "write_off": jnp.where(act, clen % page_size, 0),
+            "kv_len": jnp.where(act, clen + 1, 0),
         }
-        pos = jnp.where(active, clen, 0)[:, None]
+        pos = jnp.where(act, clen, 0)[:, None]
         logits, cache = lm_decode(cfg, params, tok[:, None], cache, pos,
                                   paged=paged)
+        logits = jnp.where((first & poison)[:, None],
+                           jnp.float32(jnp.nan).astype(logits.dtype), logits)
+        # sentinel: a slot dies the step its logits stop being finite
+        # (inactive slots read garbage rows — only active ones can die)
+        alive = alive & (jnp.all(jnp.isfinite(logits), axis=-1) | ~act)
         nxt = sample(logits, sk, temperature=temperature, top_k=top_k)
-        tok = jnp.where(active, nxt, tok)
-        clen = clen + active.astype(clen.dtype)
-        return (cache, tok, clen, key), ((nxt, logits) if with_logits
-                                         else nxt)
+        keep = act & alive
+        tok = jnp.where(keep, nxt, tok)
+        clen = clen + keep.astype(clen.dtype)
+        return (cache, tok, clen, key, alive), (
+            (nxt, logits, alive) if with_logits else (nxt, alive))
 
-    (cache, _, _, _), ys = jax.lax.scan(
-        body, (cache, last_tok, cur_len, key), None, length=k_steps)
+    first = jnp.zeros(k_steps, bool).at[0].set(True)
+    (cache, _, _, _, _), ys = jax.lax.scan(
+        body, (cache, last_tok, cur_len, key, jnp.ones(n_slots, bool)),
+        first, length=k_steps)
     if with_logits:
-        return ys[0], ys[1], cache
-    return ys, cache
+        return ys[0], ys[1], ys[2], cache
+    return ys[0], ys[1], cache
 
 
 @functools.partial(jax.jit,
@@ -269,12 +337,12 @@ def _decode_scan(cfg, params, cache, last_tok, cur_len, active,
                                     "temperature", "top_k"),
                    donate_argnames=("cache",))
 def _paged_decode_scan_jit(cfg, params, cache, last_tok, cur_len, active,
-                           block_table, key, *, k_steps, page_size,
+                           block_table, key, poison, *, k_steps, page_size,
                            temperature, top_k):
     return _decode_scan(cfg, params, cache, last_tok, cur_len, active,
                         block_table, key, k_steps=k_steps,
                         page_size=page_size, temperature=temperature,
-                        top_k=top_k)
+                        top_k=top_k, poison=poison)
 
 
 @functools.partial(jax.jit,
@@ -309,9 +377,9 @@ def _spec_block_jit(cfg, params, draft_params, cache, draft_cache, last_tok,
                          page_size=page_size, temperature=temperature,
                          top_k=top_k, with_logits=(temperature > 0.0))
     if temperature > 0.0:
-        draft_toks, draft_logits, draft_cache = draft
+        draft_toks, draft_logits, _, draft_cache = draft
     else:
-        (draft_toks, draft_cache), draft_logits = draft, None
+        (draft_toks, _, draft_cache), draft_logits = draft, None
     # verify rows: [last_tok, d_1..d_k] at absolute positions cur_len..
     # cur_len+k (inactive slots parked at -1 / kv_len 0 — their writes land
     # on the scratch page and their rows read as garbage we never emit)
@@ -377,24 +445,25 @@ def _paged_prefill_tp_jit(cfg, mesh, params, tokens, cache, positions, paged):
                                     "temperature", "top_k"),
                    donate_argnames=("cache",))
 def _paged_decode_scan_tp_jit(cfg, mesh, params, cache, last_tok, cur_len,
-                              active, block_table, key, *, k_steps,
+                              active, block_table, key, poison, *, k_steps,
                               page_size, temperature, top_k):
     lcfg = tp_local_cfg(cfg)
     rep = PartitionSpec()
     pspecs, cspecs, _ = _tp_in_specs(cfg, mesh, params, cache, {})
 
-    def body(params, cache, last_tok, cur_len, active, block_table, key):
+    def body(params, cache, last_tok, cur_len, active, block_table, key,
+             poison):
         params = localize_quantized(params)
         with sharding_ctx(None):
             return _decode_scan(lcfg, params, cache, last_tok, cur_len,
                                 active, block_table, key, k_steps=k_steps,
                                 page_size=page_size, temperature=temperature,
-                                top_k=top_k)
+                                top_k=top_k, poison=poison)
 
     return shard_map(body, mesh=mesh,
-                     in_specs=(pspecs, cspecs, rep, rep, rep, rep, rep),
-                     out_specs=(rep, cspecs), check_rep=False)(
-        params, cache, last_tok, cur_len, active, block_table, key)
+                     in_specs=(pspecs, cspecs, rep, rep, rep, rep, rep, rep),
+                     out_specs=(rep, rep, cspecs), check_rep=False)(
+        params, cache, last_tok, cur_len, active, block_table, key, poison)
 
 
 class ContinuousEngine:
@@ -469,7 +538,8 @@ class ContinuousEngine:
                  tp: int = 1, mesh=None, spec_decode: bool = False,
                  draft_bits: int = 2, spec_k: int = 4,
                  preempt: bool = False,
-                 age_promote: Optional[float] = None):
+                 age_promote: Optional[float] = None,
+                 faults: Optional[FaultPlan] = None):
         if cfg.enc_dec:
             raise NotImplementedError("paged serving covers decoder-only LMs")
         if mesh is not None and tp == 1:
@@ -643,6 +713,24 @@ class ContinuousEngine:
         self._prefilling: dict[int, Request] = {}    # slot -> mid-prompt req
         self._key, self._first_key = jax.random.split(jax.random.PRNGKey(seed))
         self._next_rid = 0
+        # the virtual clock is engine state (not a run()-local counter) so
+        # a snapshot/restore resumes arrival gating mid-trace; run() keeps
+        # ticking it from wherever the restore left it
+        self.t = 0
+        self.n_steps_total = 0       # step() call count — fault step index
+        # ------------------------------------------------ fault tolerance
+        self.faults = faults         # FaultPlan consumed by _apply_faults
+        self.debug = os.environ.get("REPRO_DEBUG", "") == "1"
+        self.n_kernel_fallbacks = 0  # fused -> gather decode retries
+        self.n_spill_corruptions = 0     # corruption faults injected
+        self.n_spill_checksum_fails = 0  # ... caught at restore time
+        self.n_nonfinite = 0         # slots the isfinite sentinel killed
+        self.n_faults_applied = 0    # total injected-fault firings
+        self._poison_slots: set[int] = set()  # NaN-inject at next decode
+        self._kernel_fault = False   # fail the next fused decode dispatch
+        self._spill_corrupt = False  # corrupt the next spill payload
+        # pages pinned by pool_exhaust faults: [release_step, [pages]]
+        self._fault_holds: list[list] = []
         self.n_decode_steps = 0
         self.n_prefills = 0
         self.n_prefill_tokens = 0    # real prompt tokens actually prefilled
@@ -778,10 +866,14 @@ class ContinuousEngine:
 
     # ------------------------------------------------------------- intake
     def submit(self, prompt: np.ndarray, *, max_new: int = 32,
-               arrival: float = 0.0, priority: int = 0) -> Request:
+               arrival: float = 0.0, priority: int = 0,
+               deadline: Optional[float] = None) -> Request:
         """`priority`: SLO class — 0 interactive (may preempt batch work
         when `preempt=True`), 1 batch (admitted when interactive traffic
-        leaves room; aging keeps it starvation-free)."""
+        leaves room; aging keeps it starvation-free).
+        `deadline`: absolute time past which the answer is worthless — the
+        scheduler sheds the request from the queue (never admitted) or the
+        engine cancels it mid-run, freeing slot and pages either way."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size + max_new > self.spec.max_len:
             raise ValueError(
@@ -796,7 +888,7 @@ class ContinuousEngine:
                 f"request needs {need} pages but the pool only has "
                 f"{self.spec.n_pages - 1} allocatable pages")
         req = Request(rid=self._next_rid, prompt=prompt, max_new=max_new,
-                      arrival=arrival, priority=priority)
+                      arrival=arrival, priority=priority, deadline=deadline)
         self._next_rid += 1
         self.sched.submit(req)
         return req
@@ -831,21 +923,44 @@ class ContinuousEngine:
 
         req.prefill_done = slot not in self._prefilling
         snap = self.pool.spill(slot, n_live, copy_out)
+        if snap.host is not None:
+            # checksum BEFORE any injected corruption: restore re-verifies
+            # against what the data looked like when it really left device
+            snap.checksum = _tree_checksum(snap.host)
+            if self._spill_corrupt:
+                self._spill_corrupt = False
+                snap.host, hit = _corrupt_first_leaf(snap.host)
+                if hit:
+                    self.n_spill_corruptions += 1
         self._prefilling.pop(slot, None)
         self.active[slot] = False
         self.cur_len[slot] = 0
         self.last_tok[slot] = 0
         return snap
 
-    def _restore_slot(self, slot: int, req: Request) -> None:
+    def _restore_slot(self, slot: int, req: Request, now: float) -> None:
         """Finish a scheduler restore: scatter the spilled KV back into the
         fresh pages the pool picked, rebuild the slot's host mirrors, and
         re-enter the request where it left off — decoding slots resume with
         their last emitted token pending, mid-prefill slots rejoin the
         chunked-prefill set at their old progress (only tokens that were
-        never prefilled get prefilled; nothing is recomputed)."""
+        never prefilled get prefilled; nothing is recomputed).
+
+        The host payload is checksum-verified first: scattering a corrupted
+        snapshot would resume the stream on garbage KV (and a shared page's
+        neighbors would read it too), so a mismatch quarantines the request
+        instead — pages freed, error recorded, co-batched slots untouched."""
         snap = req.spill
         assert snap is not None and snap.restored is not None
+        if (snap.copied and snap.checksum is not None
+                and _tree_checksum(snap.host) != snap.checksum):
+            self.n_spill_checksum_fails += 1
+            req.spill = None
+            # the pool already converted the snapshot's kept references
+            # into slot references in restore(); quarantine releases them
+            # all along with the fresh pages
+            self.sched.quarantine(slot, now, "spill_corrupt")
+            return
         if snap.copied:
             idx = self._pad_pages(snap.restored)
             self.cache = _spill_scatter_jit(self.cache, jnp.asarray(idx),
@@ -859,13 +974,268 @@ class ContinuousEngine:
         else:
             self._prefilling[slot] = req
 
+    # -------------------------------------------- engine snapshot / restore
+    _SNAP_COUNTERS = ("n_decode_steps", "n_prefills", "n_prefill_tokens",
+                      "n_shared_tokens", "n_spilled_pages",
+                      "n_restored_pages", "n_spec_rounds", "n_draft_tokens",
+                      "n_spec_emitted", "n_kernel_fallbacks",
+                      "n_spill_corruptions", "n_spill_checksum_fails",
+                      "n_nonfinite", "n_faults_applied")
+
+    def _fingerprint(self) -> dict:
+        """Identity of the serving configuration a snapshot belongs to.
+        Restore refuses a snapshot from a different config/geometry — the
+        cache tree shapes, RNG stream, and scheduler semantics would all
+        silently diverge. `paged_attn_impl` is excluded on purpose: the
+        fused and gather paths are bitwise-identical, and a kernel-fault
+        fallback mid-trace must not orphan earlier snapshots (the live
+        impl is carried in the snapshot body instead)."""
+        return {
+            "cfg": repr(self.cfg.replace(paged_attn_impl="fused")),
+            "n_slots": self.n_slots,
+            "spec": (self.spec.n_pages, self.spec.page_size,
+                     self.spec.max_pages),
+            "eos_id": self.eos_id,
+            "prefill_bucket": self.prefill_bucket,
+            "prefill_batch": self.prefill_batch,
+            "decode_block": self.decode_block,
+            "temperature": self.temperature, "top_k": self.top_k,
+            "prefix_share": self.prefix_share,
+            "chunk_tokens": self.chunk_tokens,
+            "tp": self.tp,
+            "spec_decode": self.spec_decode,
+            "draft_bits": self.draft_bits, "spec_k": self.spec_k,
+            "preempt": self.preempt,
+            "age_promote": self.sched.age_promote,
+        }
+
+    def snapshot(self) -> dict:
+        """Capture the full serving state as a plain nested dict of host
+        values: every cache pool leaf, the allocator (free-list order
+        included — allocation determinism), the scheduler (requests, queue
+        order, event log, counters), the slot host mirrors, the RNG keys,
+        the virtual clock, and the in-flight fault one-shots. The result
+        is self-contained (no live object references), serializable via
+        ``checkpoint.store.save_snapshot``, and consumable by ``restore``
+        on a freshly built identical engine — which then resumes the trace
+        with bit-identical greedy tokens. The FaultPlan itself is *not*
+        captured: the crash driver owns it (see serve/faults.py)."""
+        snap = {
+            "fingerprint": self._fingerprint(),
+            "t": self.t,
+            "n_steps_total": self.n_steps_total,
+            "next_rid": self._next_rid,
+            "paged_attn_impl": self.cfg.paged_attn_impl,
+            "rng": {"key": np.asarray(self._key),
+                    "first_key": np.asarray(self._first_key)},
+            "mirrors": {"cur_len": self.cur_len.copy(),
+                        "last_tok": self.last_tok.copy(),
+                        "active": self.active.copy()},
+            "prefilling": {int(s): r.rid
+                           for s, r in self._prefilling.items()},
+            # np.asarray forces the device sync leaf-by-leaf: after this,
+            # the snapshot is consistent even if the process dies mid-write
+            "cache": jax.tree.map(np.asarray, self.cache),
+            "pool": self.pool.state_dict(),
+            "sched": self.sched.state_dict(),
+            "counters": {k: getattr(self, k) for k in self._SNAP_COUNTERS},
+            "spec_accept_sum": self.spec_accept_sum.copy(),
+            "spec_round_count": self.spec_round_count.copy(),
+            "fault_state": {
+                "poison_slots": sorted(self._poison_slots),
+                "kernel_fault": self._kernel_fault,
+                "spill_corrupt": self._spill_corrupt,
+                "fault_holds": [[int(s), [int(p) for p in pages]]
+                                for s, pages in self._fault_holds],
+            },
+        }
+        if self.spec_decode:
+            snap["draft_cache"] = jax.tree.map(np.asarray, self.draft_cache)
+        return snap
+
+    def restore(self, snap: dict) -> None:
+        """Load a ``snapshot()`` into this engine (built with the same
+        config/geometry — validated against the fingerprint) and resume:
+        the next ``step()``/``run()`` continues the interrupted trace with
+        bit-identical greedy tokens. The scheduler's requests are rebuilt
+        by value and re-linked into every membership structure by rid, so
+        object identity (slot <-> prefilling <-> queue) holds again."""
+        fp, got = self._fingerprint(), dict(snap["fingerprint"])
+        if got != fp:
+            bad = sorted(k for k in set(fp) | set(got)
+                         if fp.get(k) != got.get(k))
+            raise ValueError(f"snapshot fingerprint mismatch on {bad}: "
+                             f"snapshot from a different engine config")
+        impl = str(snap["paged_attn_impl"])
+        if impl != self.cfg.paged_attn_impl:
+            self.cfg = self.cfg.replace(paged_attn_impl=impl)
+        self.t = int(snap["t"])
+        self.n_steps_total = int(snap["n_steps_total"])
+        self._next_rid = int(snap["next_rid"])
+        self._key = jnp.asarray(np.asarray(snap["rng"]["key"]))
+        self._first_key = jnp.asarray(np.asarray(snap["rng"]["first_key"]))
+        self.cur_len = np.asarray(snap["mirrors"]["cur_len"],
+                                  np.int32).copy()
+        self.last_tok = np.asarray(snap["mirrors"]["last_tok"],
+                                   np.int32).copy()
+        self.active = np.asarray(snap["mirrors"]["active"], bool).copy()
+        cache = jax.tree.map(jnp.asarray, snap["cache"])
+        if self.tp > 1:
+            cache = jax.tree.map(
+                lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
+                cache, paged_pool_pspecs(cache, self.mesh, axis=TP_AXIS))
+        self.cache = cache
+        if self.spec_decode:
+            self.draft_cache = jax.tree.map(jnp.asarray,
+                                            snap["draft_cache"])
+        self.pool.load_state_dict(snap["pool"])
+        by_rid = self.sched.load_state_dict(snap["sched"])
+        self._prefilling = {int(s): by_rid[int(r)]
+                            for s, r in snap["prefilling"].items()}
+        for k in self._SNAP_COUNTERS:
+            setattr(self, k, int(snap["counters"][k]))
+        self.spec_accept_sum = np.asarray(snap["spec_accept_sum"],
+                                          np.int64).copy()
+        self.spec_round_count = np.asarray(snap["spec_round_count"],
+                                           np.int64).copy()
+        fs = snap["fault_state"]
+        self._poison_slots = {int(s) for s in fs["poison_slots"]}
+        self._kernel_fault = bool(fs["kernel_fault"])
+        self._spill_corrupt = bool(fs["spill_corrupt"])
+        self._fault_holds = [[int(s), [int(p) for p in pages]]
+                             for s, pages in fs["fault_holds"]]
+        if self.debug:
+            self._debug_check()
+
+    def fault_stats(self) -> dict:
+        """Fault-tolerance accounting: injections applied, sentinel and
+        checksum catches, kernel fallbacks, and the scheduler's
+        deadline/quarantine counters — everything the chaos suite and the
+        launcher report assert on."""
+        return {
+            "n_steps": self.n_steps_total,
+            "n_faults_applied": self.n_faults_applied,
+            "n_nonfinite": self.n_nonfinite,
+            "n_kernel_fallbacks": self.n_kernel_fallbacks,
+            "n_spill_corruptions": self.n_spill_corruptions,
+            "n_spill_checksum_fails": self.n_spill_checksum_fails,
+            "n_quarantined": self.sched.n_quarantined,
+            "n_shed": self.sched.n_shed,
+            "n_cancelled": self.sched.n_cancelled,
+            "held_pages": sum(len(h[1]) for h in self._fault_holds),
+            "paged_attn_impl": self.cfg.paged_attn_impl,
+        }
+
+    def _debug_check(self) -> None:
+        """REPRO_DEBUG=1 per-step validation: pool invariants plus
+        slot-mirror/scheduler-state agreement, so chaos and fuzz runs fail
+        at the step corruption happens instead of at drain. Cheap (host
+        arithmetic only, no device sync) but O(slots + pages) per step —
+        opt-in via the env var, not default-on."""
+        self.pool.check_invariants()
+        for slot in range(self.n_slots):
+            req = self.sched.slots[slot]
+            if req is None:
+                assert not self.active[slot], \
+                    f"slot {slot}: active with no request"
+                assert slot not in self._prefilling, \
+                    f"slot {slot}: prefilling with no request"
+                assert np.all(self.pool.tables[slot] == -1), \
+                    f"slot {slot}: pages mapped with no request"
+                continue
+            assert req.slot == slot, \
+                f"slot {slot}: request {req.rid} thinks it is in {req.slot}"
+            mapped = int(np.sum(self.pool.tables[slot] >= 0))
+            if slot in self._prefilling:
+                assert not self.active[slot], \
+                    f"slot {slot}: both prefilling and decoding"
+                assert int(self.cur_len[slot]) <= req.n_prompt, \
+                    f"slot {slot}: prefill fill beyond the prompt"
+            else:
+                assert self.active[slot], \
+                    f"slot {slot}: occupied but neither prefilling nor " \
+                    f"decoding"
+                assert (int(self.cur_len[slot])
+                        == req.n_prompt + len(req.tokens) - 1), \
+                    f"slot {slot}: fill count disagrees with the token " \
+                    f"stream ({int(self.cur_len[slot])} vs " \
+                    f"{req.n_prompt}+{len(req.tokens)}-1)"
+            assert mapped >= self.spec.pages_for(int(self.cur_len[slot])), \
+                f"slot {slot}: fill {int(self.cur_len[slot])} exceeds its " \
+                f"{mapped} mapped pages"
+
+    # ------------------------------------------------- fault-plan plumbing
+    def _apply_faults(self, step_idx: int, now: float) -> None:
+        """Fire every fault scheduled for this step (see serve/faults.py).
+        Holds from expired pool_exhaust faults release first so a fault
+        plan can never permanently shrink the pool."""
+        due = [h for h in self._fault_holds if h[0] <= step_idx]
+        for h in due:
+            self.pool.release_hold(h[1])
+            self._fault_holds.remove(h)
+        if self.faults is None:
+            return
+        for f in self.faults.at(step_idx):
+            self.n_faults_applied += 1
+            if f.kind == "step_exception":
+                raise FaultInjected(f)
+            elif f.kind == "nan_logits":
+                self._poison_slots.add(max(0, f.slot) % self.n_slots)
+            elif f.kind == "pool_exhaust":
+                pages = self.pool.hold(f.pages)
+                if pages:
+                    self._fault_holds.append(
+                        [step_idx + max(1, f.duration), pages])
+            elif f.kind == "latency_spike":
+                # virtual time jumps; run() passes `now` from self.t, so
+                # the spike ages queues/deadlines from the next tick on
+                self.t += max(1, f.duration)
+            elif f.kind == "kernel_fault":
+                self._kernel_fault = True
+            elif f.kind == "spill_corrupt":
+                self._spill_corrupt = True
+
+    def _enforce_deadlines(self, now: float) -> bool:
+        """Cancel running/prefilling requests whose deadline has passed
+        (queued ones are shed inside scheduler.admit). Clearing the slot
+        mirrors here is what _spill_slot does on eviction — the slot is
+        immediately reusable."""
+        did = False
+        for slot, req in enumerate(self.sched.slots):
+            if (req is not None and req.deadline is not None
+                    and now > req.deadline):
+                self._prefilling.pop(slot, None)
+                self.active[slot] = False
+                self.cur_len[slot] = 0
+                self.last_tok[slot] = 0
+                self.sched.cancel(slot, now)
+                did = True
+        return did
+
+    def _quarantine(self, slot: int, req: Request, reason: str,
+                    now: float) -> None:
+        """Retire a slot the sentinel flagged: clear the engine mirrors and
+        let the scheduler free its pages + record the error status. The
+        other slots' state is untouched — their tokens this block came out
+        of the same scan, already shielded by the in-scan deactivation."""
+        self.n_nonfinite += reason == "nonfinite_logits"
+        self._prefilling.pop(slot, None)
+        self.active[slot] = False
+        self.cur_len[slot] = 0
+        self.last_tok[slot] = 0
+        self.sched.quarantine(slot, now, reason)
+
     # ------------------------------------------------------------ serving
     def step(self, now: float = 0.0) -> bool:
-        """One scheduler tick: admit new requests, advance every
-        mid-prefill slot by one chunk (batched by chunk bucket), then run
-        one fused block of decode steps over all decoding slots. Returns
-        False when there was nothing to do."""
-        did = False
+        """One scheduler tick: fire scheduled faults and shed/cancel
+        expired deadlines, admit new requests, advance every mid-prefill
+        slot by one chunk (batched by chunk bucket), then run one fused
+        block of decode steps over all decoding slots. Returns False when
+        there was nothing to do."""
+        step_idx = self.n_steps_total
+        self.n_steps_total += 1
+        self._apply_faults(step_idx, now)    # may raise FaultInjected
+        did = self._enforce_deadlines(now)
         for slot, req in self.sched.admit(now):
             if req.spill is not None:
                 # re-admission of a preempted request: scatter its spilled
@@ -873,7 +1243,7 @@ class ContinuousEngine:
                 # token is ever re-prefilled, the stream picks up exactly
                 # where the eviction cut it
                 did = True
-                self._restore_slot(slot, req)
+                self._restore_slot(slot, req, now)
                 continue
             # a prefix hit starts the prefill past the shared pages — the
             # cache already holds positions 0..n_shared-1 for this prompt
@@ -889,12 +1259,22 @@ class ContinuousEngine:
             if self.spec_decode:
                 self._spec_block(self.active.copy(), now)
             else:
-                toks = self._decode_block()                   # (K, n_slots)
+                toks, alive = self._decode_block()            # (K, n_slots)
                 for t in range(toks.shape[0]):
                     for slot in act:
                         req = self.sched.slots[slot]
-                        if req is not None:                   # not yet retired
-                            self._emit(slot, req, int(toks[t, slot]), now)
+                        if req is None:                       # retired
+                            continue
+                        if not alive[t, slot]:
+                            # sentinel fired: the token at (and after) this
+                            # step is garbage; the scan already froze the
+                            # slot, so only this retire remains
+                            self._quarantine(slot, req,
+                                             "nonfinite_logits", now)
+                            continue
+                        self._emit(slot, req, int(toks[t, slot]), now)
+        if self.debug:
+            self._debug_check()
         return did
 
     def run(self, *, clock=None, max_steps: Optional[int] = None):
@@ -903,21 +1283,26 @@ class ContinuousEngine:
 
         `clock`: callable giving the current time for arrival gating and
         latency stamps (wall-clock driver); default is a virtual step
-        counter, so `arrival` is then measured in scheduler steps.
+        counter, so `arrival` is then measured in scheduler steps. The
+        virtual clock is the persistent ``self.t`` — a restored engine
+        resumes mid-trace with arrival gating intact, and back-to-back
+        run() calls keep monotonic time (latency_spike faults advance it
+        too; reset ``engine.t = 0`` to re-zero between measured runs).
         """
         import time as _time
 
-        t = 0
+        steps = 0
         while not self.sched.all_done():
-            if max_steps is not None and t >= max_steps:
+            if max_steps is not None and steps >= max_steps:
                 raise RuntimeError(f"serve loop exceeded {max_steps} steps")
-            now = clock() if clock is not None else float(t)
+            now = clock() if clock is not None else float(self.t)
             did = self.step(now)
             if did or clock is None:
+                steps += 1
                 # virtual time must tick even when idle (arrival gating),
                 # but under a wall clock an idle spin would burn CPU and
                 # exhaust max_steps between sparse arrivals — sleep instead
-                t += 1
+                self.t += 1
             else:
                 _time.sleep(1e-3)
         return sorted(self.sched.drain_finished(), key=lambda r: r.rid)
@@ -1018,12 +1403,19 @@ class ContinuousEngine:
             return
         keys = jnp.stack([jax.random.fold_in(self._first_key, items[row][1].rid)
                           for row in finish])
-        first = np.asarray(_sample_first_jit(
+        first, fin_ok = _sample_first_jit(
             logits[jnp.asarray(finish)], keys,
-            temperature=self.temperature, top_k=self.top_k))
-        for tok, row in zip(first, finish):
+            temperature=self.temperature, top_k=self.top_k)
+        first, fin_ok = np.asarray(first), np.asarray(fin_ok)
+        for tok, okf, row in zip(first, fin_ok, finish):
             slot, req, _, _ = items[row]
             del self._prefilling[slot]
+            if not okf:
+                # non-finite prefill logits: quarantine before the slot
+                # ever joins the decode set (and never publish its pages
+                # into the prefix index)
+                self._quarantine(slot, req, "nonfinite_logits", now)
+                continue
             self.active[slot] = True
             if self.prefix_share:
                 # publish this prompt's full pages before _emit can retire
@@ -1031,8 +1423,10 @@ class ContinuousEngine:
                 self.pool.register_prefix(req.prompt, slot)
             self._emit(slot, req, int(tok), now)
 
-    def _decode_block(self) -> np.ndarray:
-        """One fused block of decode steps; returns (K, n_slots) tokens.
+    def _decode_block(self) -> tuple[np.ndarray, np.ndarray]:
+        """One fused block of decode steps; returns ((K, n_slots) tokens,
+        (K, n_slots) alive) — alive[t, s] False marks s's tokens from step
+        t on as garbage (non-finite logits; the caller quarantines).
 
         K adapts to the smallest remaining budget among active requests
         (pow2-capped at decode_block) so slots retire exactly at a block
@@ -1054,23 +1448,58 @@ class ContinuousEngine:
         assert (self.cur_len.dtype == np.int32
                 and self.last_tok.dtype == np.int32), \
             "engine host state drifted off the int32 jit contract"
-        # .copy(): the transfer of a host buffer may be deferred past this
-        # call's (async) dispatch, and the engine mutates these mirrors
-        # right after — handing jax the live array is a data race (the old
-        # .astype(int32) made an incidental copy; keep an explicit one)
-        args = (self.params, self.cache, jnp.asarray(self.last_tok.copy()),
-                jnp.asarray(self.cur_len.copy()), jnp.asarray(act),
-                jnp.asarray(self.pool.tables[:, :width].copy()), sk)
+        poison = np.zeros(self.n_slots, bool)
+        if self._poison_slots:
+            for s in self._poison_slots:
+                poison[s] = True
+            self._poison_slots.clear()
         kw = dict(k_steps=k_steps, page_size=self.spec.page_size,
                   temperature=self.temperature, top_k=self.top_k)
-        if self.tp > 1:
-            toks, self.cache = _paged_decode_scan_tp_jit(
-                self.cfg, self.mesh, *args, **kw)
-        else:
-            toks, self.cache = _paged_decode_scan_jit(self.cfg, *args, **kw)
+
+        def dispatch():
+            # .copy(): the transfer of a host buffer may be deferred past
+            # this call's (async) dispatch, and the engine mutates these
+            # mirrors right after — handing jax the live array is a data
+            # race (the old .astype(int32) made an incidental copy; keep
+            # an explicit one). Rebuilt per attempt: donated buffers must
+            # not be reused by the fallback retry.
+            args = (self.params, self.cache,
+                    jnp.asarray(self.last_tok.copy()),
+                    jnp.asarray(self.cur_len.copy()), jnp.asarray(act),
+                    jnp.asarray(self.pool.tables[:, :width].copy()), sk,
+                    jnp.asarray(poison))
+            if self._kernel_fault:
+                # simulates the *fused* kernel failing to dispatch; once
+                # the engine has already degraded to the gather oracle
+                # there is no fused path left to fail, so the injection
+                # is consumed as a no-op
+                self._kernel_fault = False
+                if self.cfg.paged_attn_impl != "gather":
+                    raise RuntimeError("injected kernel dispatch failure")
+            if self.tp > 1:
+                return _paged_decode_scan_tp_jit(
+                    self.cfg, self.mesh, *args, **kw)
+            return _paged_decode_scan_jit(self.cfg, *args, **kw)
+
+        try:
+            toks, alive, self.cache = dispatch()
+        except FaultInjected:
+            raise
+        except Exception:
+            # kernel-dispatch failure (trace/lowering raises before the
+            # donated cache is consumed — execution-time donation makes
+            # the retry safe): permanently fall back to the gather oracle
+            # paged-attention path and retry once. Correctness is
+            # bitwise-identical (gather is the fused kernel's oracle);
+            # only bandwidth is lost, and the counter makes it visible.
+            if self.cfg.paged_attn_impl == "gather":
+                raise
+            self.cfg = self.cfg.replace(paged_attn_impl="gather")
+            self.n_kernel_fallbacks += 1
+            toks, alive, self.cache = dispatch()
         self.cur_len[act] += k_steps
         self.n_decode_steps += k_steps
-        return np.asarray(toks)
+        return np.asarray(toks), np.asarray(alive)
 
     def _spec_block(self, act: np.ndarray, now: float) -> None:
         """One speculative round over all decoding slots.

@@ -104,6 +104,10 @@ class SpillSnapshot:
     #                                  copied positions (set by restore, in
     #                                  snap.copied order) — the engine
     #                                  scatters `host` back into these
+    checksum: Optional[int] = None   # crc over `host` set by the engine at
+    #                                  spill time; verified before scatter so
+    #                                  a corrupted snapshot quarantines the
+    #                                  request instead of resuming on garbage
 
 
 class PagePool:
@@ -145,6 +149,9 @@ class PagePool:
         # tracked separately so check_invariants can still prove
         # conservation while requests sit preempted
         self._spill_refs = np.zeros(spec.n_pages, np.int32)
+        # references held by hold() (fault injection pins pages to simulate
+        # exhaustion) — same conservation treatment as spill refs
+        self._hold_refs = np.zeros(spec.n_pages, np.int32)
 
     @property
     def n_free(self) -> int:
@@ -419,6 +426,81 @@ class PagePool:
         snap.restored = out
         return out
 
+    def discard_spill(self, snap: SpillSnapshot) -> None:
+        """Drop a spill snapshot without restoring it (the preempted request
+        was shed/cancelled): release the snapshot's kept-page references so
+        shared pages stop being pinned. The copied host payload just gets
+        garbage-collected with the snapshot."""
+        for _, page in snap.kept:
+            self._spill_refs[page] -= 1
+            assert self._spill_refs[page] >= 0, "spill ref over-released"
+            self.refcount[page] -= 1
+            assert self.refcount[page] >= 0, f"page {page} over-released"
+            if self.refcount[page] == 0:
+                self._free.append(int(page))
+        snap.kept = []
+
+    # --------------------------------------------------- fault injection
+    def hold(self, n: int) -> list[int]:
+        """Pin up to `n` free pages (fault injection: simulated exhaustion).
+
+        Held pages leave the free list and take a reference, so admission
+        sees a genuinely smaller pool; `release_hold` gives them back.
+        Returns the pages actually held (the free list may be shorter than
+        asked — holding never evicts cached pages)."""
+        pages = [self._free.pop() for _ in range(min(n, len(self._free)))]
+        for p in pages:
+            self.refcount[p] += 1
+            self._hold_refs[p] += 1
+        return pages
+
+    def release_hold(self, pages: list[int]) -> None:
+        """Return pages pinned by `hold` to the free list."""
+        for p in pages:
+            self._hold_refs[p] -= 1
+            assert self._hold_refs[p] >= 0, "hold ref over-released"
+            self.refcount[p] -= 1
+            assert self.refcount[p] >= 0, f"page {p} over-released"
+            if self.refcount[p] == 0:
+                self._free.append(int(p))
+
+    # ------------------------------------------------- snapshot / restore
+    def state_dict(self) -> dict:
+        """Full allocator state for engine snapshots. The free list keeps
+        its LIFO *order* (allocation order after restore must match an
+        uninterrupted run for bit-identical replay), and the prefix index
+        keeps its LRU insertion order for the same reason."""
+        return {
+            "free": list(self._free),
+            "tables": self.tables.copy(),
+            "refcount": self.refcount.copy(),
+            "spill_refs": self._spill_refs.copy(),
+            "hold_refs": self._hold_refs.copy(),
+            "generation": self.generation,
+            # insertion-ordered: (hex key, page) pairs reproduce the LRU
+            "prefix_index": [(k.hex(), int(p))
+                             for k, p in self._prefix_index.items()],
+            "parent": [(k.hex(), None if p is None else p.hex())
+                       for k, p in self._parent.items()],
+            "children": [(k.hex(), int(n))
+                         for k, n in self._children.items()],
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self._free = [int(p) for p in state["free"]]
+        self.tables = np.asarray(state["tables"], np.int32).copy()
+        self.refcount = np.asarray(state["refcount"], np.int32).copy()
+        self._spill_refs = np.asarray(state["spill_refs"], np.int32).copy()
+        self._hold_refs = np.asarray(state["hold_refs"], np.int32).copy()
+        self.generation = int(state["generation"])
+        self._prefix_index = OrderedDict(
+            (bytes.fromhex(k), int(p)) for k, p in state["prefix_index"])
+        self._parent = {bytes.fromhex(k):
+                        (None if p is None else bytes.fromhex(p))
+                        for k, p in state["parent"]}
+        self._children = {bytes.fromhex(k): int(n)
+                          for k, n in state["children"]}
+
     def check_invariants(self) -> None:
         """Assert the refcount/free-list/index bookkeeping is consistent:
         every page's refcount equals its holder count, the free list is
@@ -429,7 +511,8 @@ class PagePool:
         for page in self._prefix_index.values():
             counts[page] += 1
         assert np.all(self._spill_refs >= 0), "negative spill refcount"
-        counts = counts + self._spill_refs
+        assert np.all(self._hold_refs >= 0), "negative hold refcount"
+        counts = counts + self._spill_refs + self._hold_refs
         assert np.all(self.refcount >= 0), "negative refcount"
         assert np.array_equal(self.refcount, counts), \
             "refcounts out of sync with holders"

@@ -58,11 +58,18 @@ class Request:
     max_new: int
     arrival: float = 0.0
     priority: int = INTERACTIVE     # SLO class: 0 interactive, 1 batch
+    deadline: Optional[float] = None   # absolute; past it the request is
+    #                                    shed from the queue or cancelled
+    #                                    mid-run instead of finishing
     # lifecycle (filled by the scheduler/engine)
     tokens: list = dataclasses.field(default_factory=list)
     slot: int = -1
     done: bool = False
     rejected: bool = False          # structurally un-admittable (too wide)
+    shed: bool = False              # dropped from the queue past deadline
+    cancelled: bool = False         # evicted mid-run past deadline
+    error: Optional[str] = None     # quarantine reason (non-finite logits,
+    #                                 corrupted spill snapshot, ...)
     n_shared: int = 0               # prompt tokens served from the prefix cache
     admitted_at: Optional[float] = None   # FIRST admission (not re-admits)
     first_token_at: Optional[float] = None
@@ -99,6 +106,44 @@ class Request:
             return None
         return ((self.finished_at - self.first_token_at)
                 / (len(self.tokens) - 1))
+
+
+# plain-value request (de)serialization for engine snapshots — every field
+# except the two needing conversion (prompt array, spill snapshot)
+_REQ_SCALARS = ("rid", "max_new", "arrival", "priority", "deadline", "slot",
+                "done", "rejected", "shed", "cancelled", "error", "n_shared",
+                "admitted_at", "first_token_at", "finished_at", "n_preempts",
+                "prefill_done", "queue_wait", "_enqueued_at")
+
+
+def _req_state(req: Request) -> dict:
+    d = {f: getattr(req, f) for f in _REQ_SCALARS}
+    d["prompt"] = np.asarray(req.prompt, np.int32)
+    d["tokens"] = list(req.tokens)
+    s = req.spill
+    d["spill"] = None if s is None else {
+        "n_pages": s.n_pages, "n_live": s.n_live,
+        "kept": [(int(i), int(p)) for i, p in s.kept],
+        "copied": [int(i) for i in s.copied],
+        "host": s.host, "checksum": s.checksum,
+    }
+    return d
+
+
+def _req_from_state(d: dict) -> Request:
+    req = Request(rid=int(d["rid"]), prompt=np.asarray(d["prompt"], np.int32),
+                  max_new=int(d["max_new"]))
+    for f in _REQ_SCALARS:
+        setattr(req, f, d[f])
+    req.tokens = list(d["tokens"])
+    s = d["spill"]
+    if s is not None:
+        req.spill = SpillSnapshot(
+            n_pages=int(s["n_pages"]), n_live=int(s["n_live"]),
+            kept=[(int(i), int(p)) for i, p in s["kept"]],
+            copied=[int(i) for i in s["copied"]],
+            host=s["host"], checksum=s["checksum"])
+    return req
 
 
 class Scheduler:
@@ -155,6 +200,12 @@ class Scheduler:
         self.n_rejected = 0
         self.n_finished_ok = 0          # retired complete (not rejected)
         self.n_finished_preempted = 0   # ... of which were evicted >= once
+        # deadline / fault accounting — disjoint from n_finished_ok: a
+        # request counts in exactly one of ok/rejected/shed/cancelled/
+        # quarantined when it retires
+        self.n_shed = 0                 # dropped from the queue past deadline
+        self.n_cancelled = 0            # running, cancelled past deadline
+        self.n_quarantined = 0          # retired with an error status
         # (rid, pool generation) -> shared pages of the blocked queue head,
         # so a head-of-line-blocked request doesn't re-hash its whole
         # prompt on every tick it spends waiting for pages
@@ -278,6 +329,7 @@ class Scheduler:
         order; a pair whose request has ``spill`` set is a *restore* — the
         engine must re-stitch the spilled KV before stepping it."""
         self._ingest(now)
+        self._shed_expired(now)
         out = []
         skipped: set[int] = set()
         while True:
@@ -334,6 +386,63 @@ class Scheduler:
             break                     # head-of-line blocks on slots/pages
         return out
 
+    # -------------------------------------------------- deadlines / faults
+    def _shed_expired(self, now: float) -> int:
+        """Drop queued requests whose deadline has passed — serving them
+        would burn prefill/decode work on answers nobody will read. A shed
+        preempted request discards its spill snapshot (releasing the
+        kept-page references it pinned); the host payload goes with it."""
+        n = 0
+        for q in self.queues:
+            expired = [r for r in q
+                       if r.deadline is not None and now > r.deadline]
+            for req in expired:
+                q.remove(req)
+                if req.spill is not None:
+                    self.pool.discard_spill(req.spill)
+                    req.spill = None
+                req.queue_wait += now - req._enqueued_at
+                req.shed = True
+                req.done = True
+                req.finished_at = now
+                self.n_shed += 1
+                self.events.append(("shed", now, req.rid, -1))
+                self._retired.append(req)
+                n += 1
+        return n
+
+    def cancel(self, slot: int, now: float) -> None:
+        """Cancel the running request in `slot` (deadline passed mid-run):
+        free its pages, retire it flagged ``cancelled``. The engine clears
+        its own slot mirrors around this call."""
+        req = self.slots[slot]
+        assert req is not None
+        self.pool.release(slot)
+        self.slots[slot] = None
+        req.slot = -1
+        req.cancelled = True
+        req.done = True
+        req.finished_at = now
+        self.n_cancelled += 1
+        self.events.append(("cancel", now, req.rid, slot))
+        self._retired.append(req)
+
+    def quarantine(self, slot: int, now: float, reason: str) -> None:
+        """Retire the request in `slot` with an error status (non-finite
+        logits, corrupted spill snapshot): free its pages so the fault
+        cannot leak capacity, record the reason, never count it as ok."""
+        req = self.slots[slot]
+        assert req is not None
+        self.pool.release(slot)
+        self.slots[slot] = None
+        req.slot = -1
+        req.error = reason
+        req.done = True
+        req.finished_at = now
+        self.n_quarantined += 1
+        self.events.append(("quarantine", now, req.rid, slot))
+        self._retired.append(req)
+
     def retire(self, slot: int, now: float = 0.0) -> None:
         req = self.slots[slot]
         assert req is not None
@@ -380,4 +489,58 @@ class Scheduler:
             "n_rejected": self.n_rejected,
             "n_finished_ok": self.n_finished_ok,
             "n_finished_preempted": self.n_finished_preempted,
+            "n_shed": self.n_shed,
+            "n_cancelled": self.n_cancelled,
+            "n_quarantined": self.n_quarantined,
         }
+
+    # ------------------------------------------------- snapshot / restore
+    _COUNTERS = ("n_preemptions", "n_restored", "n_rejected",
+                 "n_finished_ok", "n_finished_preempted", "n_shed",
+                 "n_cancelled", "n_quarantined")
+
+    def state_dict(self) -> dict:
+        """Full scheduler state, by value, for engine snapshots. Requests
+        are serialized once (keyed by rid) and every membership list refers
+        to them by rid, so identity relations (a request in a slot AND
+        mid-prefill) survive the round trip. The head-of-line lookup cache
+        is deliberately dropped: it only ever caches a lookup whose
+        ``move_to_end`` already ran, and it re-validates against the pool
+        generation, so rebuilding it lazily is free and exact."""
+        reqs = {}
+        for req in self._pending:
+            reqs[req.rid] = _req_state(req)
+        for q in self.queues:
+            for req in q:
+                reqs[req.rid] = _req_state(req)
+        for req in self.slots:
+            if req is not None:
+                reqs[req.rid] = _req_state(req)
+        for req in self._retired:
+            reqs[req.rid] = _req_state(req)
+        return {
+            "requests": reqs,
+            "pending": [r.rid for r in self._pending],
+            "queues": [[r.rid for r in q] for q in self.queues],
+            "slots": [None if r is None else r.rid for r in self.slots],
+            "retired": [r.rid for r in self._retired],
+            "events": [tuple(e) for e in self.events],
+            "counters": {k: getattr(self, k) for k in self._COUNTERS},
+        }
+
+    def load_state_dict(self, state: dict) -> dict:
+        """Rebuild scheduler state from `state_dict` output; returns the
+        rid -> Request map so the engine can re-link its own views (the
+        prefilling set) to the *same* objects."""
+        by_rid = {int(rid): _req_from_state(s)
+                  for rid, s in state["requests"].items()}
+        self._pending = [by_rid[r] for r in state["pending"]]
+        self.queues = [deque(by_rid[r] for r in q) for q in state["queues"]]
+        self.slots = [None if r is None else by_rid[r]
+                      for r in state["slots"]]
+        self._retired = [by_rid[r] for r in state["retired"]]
+        self.events = [tuple(e) for e in state["events"]]
+        for k in self._COUNTERS:
+            setattr(self, k, int(state["counters"][k]))
+        self._hol_lookup = None
+        return by_rid

@@ -36,6 +36,7 @@ class TraceItem:
     prompt: np.ndarray
     max_new: int
     priority: int = 0
+    deadline: Optional[float] = None    # absolute, like `arrival`
 
 
 def make_trace(*, kind: str = "poisson", n: int = 32, rate: float = 4.0,
@@ -45,7 +46,8 @@ def make_trace(*, kind: str = "poisson", n: int = 32, rate: float = 4.0,
                batch_frac: float = 0.5,
                burst_len: float = 4.0, idle_len: float = 8.0,
                burst_rate_mult: float = 8.0,
-               shared_prefix: int = 0) -> list[TraceItem]:
+               shared_prefix: int = 0,
+               deadline: Optional[float] = None) -> list[TraceItem]:
     """Build a seeded arrival trace.
 
     kind="poisson": exponential inter-arrivals at `rate`.
@@ -60,6 +62,8 @@ def make_trace(*, kind: str = "poisson", n: int = 32, rate: float = 4.0,
     batch-class so class mix never depends on the draw order; prompt and
     decode lengths come from the seeded rng. `shared_prefix` prepends a
     common system prompt to every request (prefix-cache traffic).
+    `deadline` gives every request an SLO of that many time units after
+    its arrival — the scheduler sheds/cancels whatever misses it.
     """
     rng = np.random.default_rng(seed)
     if kind == "poisson":
@@ -86,8 +90,11 @@ def make_trace(*, kind: str = "poisson", n: int = 32, rate: float = 4.0,
         prompt = np.concatenate([system,
                                  rng.integers(0, vocab_size, plen)])
         prio = 1 if (stride and i % stride == stride - 1) else 0
-        items.append(TraceItem(arrival=float(arrivals[i]), prompt=prompt,
-                               max_new=mnew, priority=prio))
+        items.append(TraceItem(
+            arrival=float(arrivals[i]), prompt=prompt, max_new=mnew,
+            priority=prio,
+            deadline=(None if deadline is None
+                      else float(arrivals[i]) + deadline)))
     return items
 
 
@@ -100,7 +107,8 @@ def replay(engine, trace: Sequence[TraceItem], *, clock=None,
     callable for real-time measurement. The report carries the drained
     requests under "requests" so callers can assert token streams."""
     reqs = [engine.submit(it.prompt, max_new=it.max_new,
-                          arrival=it.arrival, priority=it.priority)
+                          arrival=it.arrival, priority=it.priority,
+                          deadline=it.deadline)
             for it in trace]
     done = engine.run(clock=clock, max_steps=max_steps)
     makespan = max((r.finished_at for r in done if r.finished_at is not None),
@@ -109,6 +117,8 @@ def replay(engine, trace: Sequence[TraceItem], *, clock=None,
     report["scheduler"] = engine.sched.stats()
     report["spill"] = {"spilled_pages": engine.n_spilled_pages,
                        "restored_pages": engine.n_restored_pages}
+    if hasattr(engine, "fault_stats"):
+        report["faults"] = engine.fault_stats()
     report["requests"] = reqs
     return report
 
@@ -117,8 +127,16 @@ def _pct(xs: list, q: float) -> float:
     return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
 
 
+def _failed(r) -> bool:
+    """Request retired without a complete answer: structurally rejected,
+    deadline-shed/cancelled, or quarantined with an error status."""
+    return bool(r.rejected or getattr(r, "shed", False)
+                or getattr(r, "cancelled", False)
+                or getattr(r, "error", None))
+
+
 def _class_metrics(reqs: list, makespan: float) -> dict:
-    served = [r for r in reqs if not r.rejected]
+    served = [r for r in reqs if not _failed(r)]
     ttft = [r.ttft for r in served if r.ttft is not None]
     tpot = [r.tpot for r in served if r.tpot is not None]
     lat = [r.finished_at - r.arrival for r in served
@@ -129,6 +147,10 @@ def _class_metrics(reqs: list, makespan: float) -> dict:
         "n_served": len(served),
         "n_rejected": sum(1 for r in reqs if r.rejected),
         "n_preempted": sum(1 for r in reqs if r.n_preempts > 0),
+        "n_shed": sum(1 for r in reqs if getattr(r, "shed", False)),
+        "n_cancelled": sum(1 for r in reqs
+                           if getattr(r, "cancelled", False)),
+        "n_error": sum(1 for r in reqs if getattr(r, "error", None)),
         "tokens": tokens,
         "goodput_tok_per_t": tokens / makespan if makespan > 0 else 0.0,
         "ttft_p50": _pct(ttft, 50), "ttft_p95": _pct(ttft, 95),
@@ -162,6 +184,7 @@ def format_report(report: dict, *, unit: str = "steps") -> str:
     """Human-readable per-class table for launcher output."""
     lines = []
     head = (f"{'class':<12} {'n':>4} {'srv':>4} {'rej':>4} {'pre':>4} "
+            f"{'shd':>4} {'cxl':>4} {'err':>4} "
             f"{'ttft p50':>9} {'ttft p95':>9} {'tpot p50':>9} "
             f"{'lat p95':>9} {'goodput':>9}")
     lines.append(head)
@@ -171,8 +194,19 @@ def format_report(report: dict, *, unit: str = "steps") -> str:
         lines.append(
             f"{name:<12} {m['n']:>4} {m['n_served']:>4} "
             f"{m['n_rejected']:>4} {m['n_preempted']:>4} "
+            f"{m.get('n_shed', 0):>4} {m.get('n_cancelled', 0):>4} "
+            f"{m.get('n_error', 0):>4} "
             f"{m['ttft_p50']:>9.2f} {m['ttft_p95']:>9.2f} "
             f"{m['tpot_p50']:>9.2f} {m['latency_p95']:>9.2f} "
             f"{m['goodput_tok_per_t']:>9.2f}")
-    lines.append(f"(times in {unit}; goodput = completed tokens / makespan)")
+    lines.append(f"(times in {unit}; goodput = completed tokens / makespan; "
+                 f"shd/cxl = deadline shed/cancelled, err = quarantined)")
+    if "faults" in report:
+        f = report["faults"]
+        lines.append(
+            f"faults: {f['n_faults_applied']} injected, "
+            f"{f['n_nonfinite']} non-finite quarantines, "
+            f"{f['n_kernel_fallbacks']} kernel fallbacks "
+            f"(attn impl now {f['paged_attn_impl']}), "
+            f"{f['n_spill_checksum_fails']} corrupt spills caught")
     return "\n".join(lines)

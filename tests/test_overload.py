@@ -195,7 +195,8 @@ def test_rejected_vs_preempted_accounting():
         next(r for r in sched.slots if r and r.rid == 2)), 4.0)
     assert sched.stats() == {"n_preemptions": 1, "n_restored": 1,
                              "n_rejected": 1, "n_finished_ok": 3,
-                             "n_finished_preempted": 1}
+                             "n_finished_preempted": 1, "n_shed": 0,
+                             "n_cancelled": 0, "n_quarantined": 0}
     drained = sched.drain_finished()
     assert {r.rid for r in drained} == {9, 0, 1, 2}
     # stats are cumulative: draining must not zero them
@@ -522,7 +523,8 @@ EXPECTED_EVENTS = [
     ("restore", 1), ("restore", 3), ("admit", 5), ("admit", 7),
 ]
 EXPECTED_STATS = {"n_preemptions": 2, "n_restored": 2, "n_rejected": 0,
-                  "n_finished_ok": 8, "n_finished_preempted": 2}
+                  "n_finished_ok": 8, "n_finished_preempted": 2,
+                  "n_shed": 0, "n_cancelled": 0, "n_quarantined": 0}
 EXPECTED_COMPLETION_ORDER = {0: [0, 2, 6, 4], 1: [1, 3, 5, 7]}
 
 
