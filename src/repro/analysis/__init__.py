@@ -1,0 +1,24 @@
+"""repro-lint: codebase-specific static analysis + runtime sanitizers.
+
+Two halves:
+
+* :mod:`repro.analysis.lint` — an AST-based analyzer with rule-coded
+  diagnostics (``RL001``..``RL008``) that encode this repo's exactness
+  contracts: virtual-clock-only time in the serving/kernel hot paths,
+  ``.copy()`` discipline at jit boundaries for host mirrors, donation
+  safety, a kernel-contract registry covering every ``pl.pallas_call``
+  site, recompile hazards, int32 mirror dtypes, centralized pspecs, and
+  centralized env-flag parsing. Run as ``python -m repro.analysis.lint
+  src/``; exits nonzero with ``file:line RLxxx message`` lines.
+
+* :mod:`repro.analysis.sanitize` — a runtime compile-count sanitizer.
+  With ``REPRO_SANITIZE=1`` the engine's jit entry points record one
+  tracing event per compiled variant; a seeded traffic replay then
+  asserts a per-(entry point, shape-bucket/config) compile budget so a
+  shape-bucketing leak fails CI instead of silently retracing per step.
+
+Rule docs (code -> one-line contract) live in ``core.RULE_DOCS``;
+DESIGN.md "Invariants & static analysis" has the full table with the
+incidents that motivated each rule.
+"""
+from repro.analysis.core import Finding, RULE_DOCS  # noqa: F401

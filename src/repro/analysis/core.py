@@ -1,0 +1,220 @@
+"""Shared machinery for repro-lint rules: findings, pragmas, AST helpers.
+
+Every rule module exposes ``check(ctx) -> list[Finding]`` functions that
+take a :class:`FileContext` (parsed tree + per-file metadata) and return
+rule-coded findings. The driver in :mod:`repro.analysis.lint` handles
+file discovery, pragma suppression, and cross-file checks (the RL004
+registry cross-check needs the kernel-contract registry and the test
+tree, which no single file's AST contains).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Iterable, Optional
+
+# code -> one-line contract; keep in sync with the DESIGN.md rule table
+RULE_DOCS = {
+    "RL001": "no wall-clock/ambient nondeterminism in serve/ or kernels/ "
+             "(time.time, stdlib random, unseeded np.random, unordered "
+             "iteration over id-keyed request dicts)",
+    "RL002": "host-mirror copy discipline: mirror attrs (cur_len, "
+             "last_tok, active, tables) must cross the jit boundary via "
+             ".copy()/np.asarray, never as views of donated buffers",
+    "RL003": "donation safety: a name passed for a donated parameter may "
+             "not be read again after the call in the same scope",
+    "RL004": "every pl.pallas_call site maps to a KERNEL_CONTRACTS entry "
+             "in kernels/ops.py declaring its ref oracle and parity test",
+    "RL005": "recompile hazards: no jax.jit construction inside a loop, "
+             "no unhashable literals for static args of jitted calls",
+    "RL006": "int32 dtype contract: slot mirrors and block tables must be "
+             "constructed as np.int32",
+    "RL007": "PartitionSpec leaves come from distributed/partitioning.py "
+             "helpers, not inline literals",
+    "RL008": "REPRO_* env flags are read only via repro.debug_flags",
+}
+
+_PRAGMA_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Z0-9_,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line} {self.rule} {self.message}"
+
+
+class FileContext:
+    """One parsed source file plus everything rules need to judge it."""
+
+    def __init__(self, path: str, module: str, source: str,
+                 registry: Optional[dict] = None):
+        self.path = path
+        self.module = module  # dotted module name, e.g. "repro.serve.engine"
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        # registry: KERNEL_CONTRACTS from kernels/ops.py, or None when
+        # linting a lone snippet (fixture tests) — RL004 then flags every
+        # pallas_call site, which is exactly what the trigger fixture wants
+        self.registry = registry
+        annotate_parents(self.tree)
+
+    def suppressed(self, finding: Finding) -> bool:
+        """True if a `# repro-lint: disable=RLxxx` pragma names the rule,
+        either trailing the finding's line or on a standalone comment line
+        directly above it (a trailing pragma never leaks to the next
+        statement)."""
+        for lineno in (finding.line, finding.line - 1):
+            if not 1 <= lineno <= len(self.lines):
+                continue
+            text = self.lines[lineno - 1]
+            if lineno != finding.line and not text.lstrip().startswith("#"):
+                continue
+            m = _PRAGMA_RE.search(text)
+            if m:
+                codes = {c.strip() for c in m.group(1).split(",")}
+                if finding.rule in codes or "ALL" in codes:
+                    return True
+        return False
+
+
+def annotate_parents(tree: ast.AST) -> None:
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            child._rl_parent = parent  # type: ignore[attr-defined]
+
+
+def parents(node: ast.AST) -> Iterable[ast.AST]:
+    cur = getattr(node, "_rl_parent", None)
+    while cur is not None:
+        yield cur
+        cur = getattr(cur, "_rl_parent", None)
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """Render a Name/Attribute chain as 'a.b.c', else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def in_loop(node: ast.AST) -> bool:
+    """True if the node sits inside a for/while body within the nearest
+    enclosing function (a loop outside the function doesn't count: the
+    function body is traced/compiled once regardless)."""
+    for p in parents(node):
+        if isinstance(p, (ast.For, ast.AsyncFor, ast.While)):
+            return True
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            return False
+    return False
+
+
+def enclosing_function(node: ast.AST) -> Optional[ast.AST]:
+    for p in parents(node):
+        if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return p
+    return None
+
+
+def enclosing_statement(node: ast.AST) -> Optional[ast.stmt]:
+    cur: Optional[ast.AST] = node
+    while cur is not None and not isinstance(cur, ast.stmt):
+        cur = getattr(cur, "_rl_parent", None)
+    return cur
+
+
+@dataclasses.dataclass
+class JitInfo:
+    """Decoded @jax.jit / @partial(jax.jit, ...) decoration of a def."""
+    static_names: tuple
+    donate_names: tuple
+    donate_nums: tuple
+    params: tuple  # positional+kw parameter names, in order
+
+
+_JIT_NAMES = {"jax.jit", "jit"}
+
+
+def _tuple_of_str(node: ast.AST) -> tuple:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(e.value for e in node.elts
+                     if isinstance(e, ast.Constant) and isinstance(e.value, str))
+    return ()
+
+
+def _tuple_of_int(node: ast.AST) -> tuple:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(e.value for e in node.elts
+                     if isinstance(e, ast.Constant) and isinstance(e.value, int))
+    return ()
+
+
+def decode_jit_call(call: ast.Call) -> Optional[JitInfo]:
+    """Decode a jax.jit(...) or functools.partial(jax.jit, ...) call node
+    into static/donate params; None if it isn't a jit construction."""
+    fn = dotted(call.func)
+    kwargs = call.keywords
+    if fn in ("functools.partial", "partial") and call.args:
+        inner = dotted(call.args[0])
+        if inner not in _JIT_NAMES:
+            return None
+    elif fn not in _JIT_NAMES:
+        return None
+    static, dnames, dnums = (), (), ()
+    for kw in kwargs:
+        if kw.arg == "static_argnames":
+            static = _tuple_of_str(kw.value)
+        elif kw.arg == "donate_argnames":
+            dnames = _tuple_of_str(kw.value)
+        elif kw.arg == "donate_argnums":
+            dnums = _tuple_of_int(kw.value)
+    return JitInfo(static, dnames, dnums, ())
+
+
+def jit_info(fndef: ast.AST) -> Optional[JitInfo]:
+    """JitInfo for a decorated def, with params filled in; None when the
+    def isn't jit-decorated."""
+    if not isinstance(fndef, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return None
+    for dec in fndef.decorator_list:
+        info = None
+        if isinstance(dec, ast.Call):
+            info = decode_jit_call(dec)
+        elif dotted(dec) in _JIT_NAMES:
+            info = JitInfo((), (), (), ())
+        if info is not None:
+            args = fndef.args
+            params = tuple(a.arg for a in args.posonlyargs + args.args
+                           + args.kwonlyargs)
+            return JitInfo(info.static_names, info.donate_names,
+                           info.donate_nums, params)
+    return None
+
+
+def module_name_for(path: str) -> str:
+    """Dotted module name from a file path, rooted at the last 'repro'
+    path component ('src/repro/serve/engine.py' -> 'repro.serve.engine');
+    falls back to the bare stem for paths outside the package."""
+    parts = path.replace("\\", "/").split("/")
+    stem = parts[-1][:-3] if parts[-1].endswith(".py") else parts[-1]
+    if "repro" in parts[:-1]:
+        root = len(parts) - 2 - parts[-2::-1].index("repro")
+        pkg = parts[root:-1]
+        return ".".join(pkg + ([] if stem == "__init__" else [stem]))
+    return stem

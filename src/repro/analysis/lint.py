@@ -1,0 +1,198 @@
+"""repro-lint driver: `python -m repro.analysis.lint src/ [--tests tests]`.
+
+Walks the given roots for .py files, runs every rule over each file,
+applies `# repro-lint: disable=RLxxx` pragmas, then runs the tree-level
+RL004 cross-checks (registry completeness both directions, ref-oracle
+existence, parity-test existence). Exits 1 with `file:line RLxxx
+message` lines when anything is found.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+from typing import List, Optional
+
+from repro.analysis import rules_determinism, rules_kernels, rules_memory
+from repro.analysis.core import FileContext, Finding, dotted, module_name_for
+
+RULE_CHECKS = (
+    rules_determinism.check_rl001,
+    rules_memory.check_rl002,
+    rules_memory.check_rl003,
+    rules_kernels.check_rl004,
+    rules_determinism.check_rl005,
+    rules_determinism.check_rl006,
+    rules_kernels.check_rl007,
+    rules_determinism.check_rl008,
+)
+
+OPS_MODULE = "repro.kernels.ops"
+REGISTRY_NAME = "KERNEL_CONTRACTS"
+
+
+def iter_py_files(roots) -> List[str]:
+    files = []
+    for root in roots:
+        if os.path.isfile(root):
+            files.append(root)
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in ("__pycache__", ".git"))
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    files.append(os.path.join(dirpath, fn))
+    return files
+
+
+def extract_registry(files) -> Optional[dict]:
+    """ast.literal_eval the KERNEL_CONTRACTS assignment out of
+    kernels/ops.py — the registry is a pure literal by design so the
+    linter never has to import (and thus trace) kernel code."""
+    for path in files:
+        if module_name_for(path) != OPS_MODULE:
+            continue
+        with open(path, encoding="utf-8") as f:
+            tree = ast.parse(f.read(), filename=path)
+        for node in tree.body:
+            if (isinstance(node, ast.Assign)
+                    and any(isinstance(t, ast.Name)
+                            and t.id == REGISTRY_NAME
+                            for t in node.targets)):
+                return ast.literal_eval(node.value)
+    return None
+
+
+def lint_source(source: str, path: str, module: Optional[str] = None,
+                registry: Optional[dict] = None) -> List[Finding]:
+    """Lint one source string. Fixture tests call this directly: module
+    controls rule scoping, registry=None makes RL004 flag every
+    pallas_call site."""
+    ctx = FileContext(path, module or module_name_for(path), source,
+                      registry=registry)
+    findings: List[Finding] = []
+    for check in RULE_CHECKS:
+        findings.extend(f for f in check(ctx) if not ctx.suppressed(f))
+    return findings
+
+
+def _collect_test_ids(tests_root: str) -> dict:
+    """{relative test path: set of test function names} for parity-id
+    validation; parsed, not collected, so the linter stays import-free."""
+    ids = {}
+    for path in iter_py_files([tests_root]):
+        rel = os.path.relpath(path, os.path.dirname(tests_root) or ".")
+        with open(path, encoding="utf-8") as f:
+            try:
+                tree = ast.parse(f.read(), filename=path)
+            except SyntaxError:
+                continue
+        ids[rel.replace(os.sep, "/")] = {
+            n.name for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and n.name.startswith("test")}
+    return ids
+
+
+def cross_check_registry(registry: Optional[dict], files,
+                         tests_root: Optional[str]) -> List[Finding]:
+    """Tree-level RL004 checks that no single file's AST can answer:
+    stale registry entries, missing ref oracles, dangling parity ids."""
+    out: List[Finding] = []
+    ops_path = next((p for p in files
+                     if module_name_for(p) == OPS_MODULE), "kernels/ops.py")
+    if registry is None:
+        if any(module_name_for(p).startswith("repro.kernels")
+               for p in files):
+            out.append(Finding(ops_path, 1, "RL004",
+                               f"{REGISTRY_NAME} literal not found in "
+                               f"{OPS_MODULE}"))
+        return out
+    # wrapper functions that actually contain a pallas_call, per module
+    sites = {}
+    for path in files:
+        mod = module_name_for(path)
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        if "pallas_call" not in source:
+            continue
+        ctx = FileContext(path, mod, source)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                d = dotted(node.func)
+                if d and d.rpartition(".")[2] == "pallas_call":
+                    name = rules_kernels._enclosing_def_name(node)
+                    sites.setdefault(name, set()).add(mod)
+    # ref oracle targets must exist in their declared module
+    ref_defs = {}
+    for path in files:
+        mod = module_name_for(path)
+        if any(e.get("ref", "").startswith(mod + ":")
+               for e in registry.values()):
+            with open(path, encoding="utf-8") as f:
+                tree = ast.parse(f.read(), filename=path)
+            ref_defs[mod] = {
+                n.name for n in ast.walk(tree)
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    test_ids = _collect_test_ids(tests_root) if tests_root else None
+    for wrapper, entry in sorted(registry.items()):
+        if wrapper not in sites:
+            out.append(Finding(ops_path, 1, "RL004",
+                               f"{REGISTRY_NAME}[{wrapper!r}] is stale: "
+                               "no pallas_call site with that wrapper "
+                               "exists"))
+            continue
+        ref = entry.get("ref", "")
+        mod, _, fn = ref.partition(":")
+        if not fn or fn not in ref_defs.get(mod, set()):
+            out.append(Finding(ops_path, 1, "RL004",
+                               f"{REGISTRY_NAME}[{wrapper!r}] ref oracle "
+                               f"{ref!r} does not resolve to a function"))
+        if test_ids is not None:
+            for tid in entry.get("parity", ()):
+                tpath, _, tname = tid.partition("::")
+                if tname not in test_ids.get(tpath, set()):
+                    out.append(Finding(
+                        ops_path, 1, "RL004",
+                        f"{REGISTRY_NAME}[{wrapper!r}] parity id "
+                        f"{tid!r} does not match a collected test"))
+    return out
+
+
+def lint_paths(roots, tests: Optional[str] = None) -> List[Finding]:
+    files = iter_py_files(roots)
+    registry = extract_registry(files)
+    findings: List[Finding] = []
+    for path in files:
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        try:
+            findings.extend(lint_source(source, path, registry=registry))
+        except SyntaxError as e:
+            findings.append(Finding(path, e.lineno or 1, "RL000",
+                                    f"syntax error: {e.msg}"))
+    findings.extend(cross_check_registry(registry, files, tests))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="repro-lint: codebase-specific static analysis")
+    ap.add_argument("roots", nargs="+", help="files or directories to lint")
+    ap.add_argument("--tests", default=None,
+                    help="tests root for the RL004 parity-id cross-check")
+    args = ap.parse_args(argv)
+    findings = lint_paths(args.roots, tests=args.tests)
+    for f in findings:
+        print(f.format())
+    if findings:
+        print(f"repro-lint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,244 @@
+"""RL001 / RL005 / RL006 / RL008 — determinism & compile-stability rules.
+
+RL001  serve/ and kernels/ are replayed under a virtual clock and seeded
+       RNG; any ambient-entropy read there breaks bit-exact replay.
+RL005  jit construction inside a loop (or unhashable static-arg
+       literals) defeats the compile cache — every iteration retraces.
+RL006  slot mirrors and block tables are int32 by contract (device
+       mirrors, gather indices, spill checksums all assume it).
+RL008  REPRO_* env flags have one parse point (repro.debug_flags);
+       scattered os.environ reads observe mid-process changes
+       inconsistently.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.core import (FileContext, Finding, dotted, in_loop,
+                                 decode_jit_call)
+
+# ambient time sources; time.sleep is fine (pacing, not a value the
+# token stream depends on) and the engine's virtual clock is its own module
+_TIME_BANNED = {"time", "monotonic", "perf_counter", "process_time",
+                "time_ns", "monotonic_ns", "perf_counter_ns",
+                "process_time_ns"}
+# np.random module-level calls draw from hidden global state; the
+# explicitly-seeded constructors are the sanctioned path
+_NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                 "Philox"}
+# request tables keyed by arrival id — bare iteration order is
+# insertion order, which differs across replay variants; sorted() only
+_ID_KEYED_DICTS = {"_prefilling"}
+
+
+def _covered_rl001(module: str) -> bool:
+    return module.startswith("repro.serve") or module.startswith(
+        "repro.kernels")
+
+
+def check_rl001(ctx: FileContext) -> List[Finding]:
+    if not _covered_rl001(ctx.module):
+        return []
+    out = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call):
+            name = dotted(node.func)
+            if name is None:
+                continue
+            head, _, tail = name.rpartition(".")
+            if head in ("time", "_time") and tail in _TIME_BANNED:
+                out.append(Finding(ctx.path, node.lineno, "RL001",
+                                   f"wall-clock read {name}() in a "
+                                   "virtual-clock module; thread the "
+                                   "clock in explicitly"))
+            elif head == "random" or name.startswith("random."):
+                out.append(Finding(ctx.path, node.lineno, "RL001",
+                                   f"stdlib {name}() draws from ambient "
+                                   "global RNG state; use a seeded "
+                                   "np.random.default_rng or jax.random"))
+            elif name.startswith("np.random.") or name.startswith(
+                    "numpy.random."):
+                if tail not in _NP_RANDOM_OK:
+                    out.append(Finding(ctx.path, node.lineno, "RL001",
+                                       f"{name}() uses numpy's hidden "
+                                       "global RNG; use a seeded "
+                                       "default_rng(seed)"))
+                elif tail == "default_rng" and not (node.args
+                                                    or node.keywords):
+                    out.append(Finding(ctx.path, node.lineno, "RL001",
+                                       "default_rng() without a seed is "
+                                       "OS-entropy seeded; pass an "
+                                       "explicit seed"))
+        elif isinstance(node, ast.For):
+            tgt = _iter_dict_name(node.iter)
+            if tgt in _ID_KEYED_DICTS:
+                out.append(Finding(ctx.path, node.lineno, "RL001",
+                                   f"iteration over id-keyed dict "
+                                   f"{tgt!r} in an event path depends "
+                                   "on insertion order; wrap in "
+                                   "sorted()"))
+    return out
+
+
+def _iter_dict_name(it: ast.AST):
+    """The mirror-dict name iterated over, unless order-normalized.
+    Matches `self._prefilling`, `self._prefilling.keys()/.values()/
+    .items()`, and `list(self._prefilling)`; sorted(...) passes."""
+    if isinstance(it, ast.Call):
+        fn = dotted(it.func)
+        if fn == "sorted":
+            return None
+        if fn == "list" and it.args:
+            return _iter_dict_name(it.args[0])
+        if isinstance(it.func, ast.Attribute) and it.func.attr in (
+                "keys", "values", "items"):
+            it = it.func.value
+    name = dotted(it)
+    if name:
+        return name.rpartition(".")[2]
+    return None
+
+
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+               ast.SetComp)
+_UNHASHABLE_CTORS = {"list", "dict", "set"}
+
+
+def check_rl005(ctx: FileContext) -> List[Finding]:
+    out = []
+    # pass 1: collect module-visible jitted defs and their static params,
+    # so call sites can be checked for unhashable static-arg literals
+    statics_by_fn = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            from repro.analysis.core import jit_info
+            info = jit_info(node)
+            if info and info.static_names:
+                statics_by_fn[node.name] = (info.static_names, info.params)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if decode_jit_call(node) is not None and in_loop(node):
+            out.append(Finding(ctx.path, node.lineno, "RL005",
+                               "jax.jit constructed inside a loop: each "
+                               "iteration makes a fresh callable with an "
+                               "empty compile cache; hoist the jit out"))
+            continue
+        # call site of a known jitted def: static args must be hashable
+        callee = dotted(node.func)
+        callee = callee.rpartition(".")[2] if callee else None
+        if callee in statics_by_fn:
+            static_names, params = statics_by_fn[callee]
+            for i, arg in enumerate(node.args):
+                pname = params[i] if i < len(params) else None
+                if pname in static_names and _unhashable(arg):
+                    out.append(_rl005_static(ctx, arg, pname))
+            for kw in node.keywords:
+                if kw.arg in static_names and _unhashable(kw.value):
+                    out.append(_rl005_static(ctx, kw.value, kw.arg))
+    return out
+
+
+def _unhashable(node: ast.AST) -> bool:
+    if isinstance(node, _UNHASHABLE):
+        return True
+    if isinstance(node, ast.Call) and dotted(node.func) in _UNHASHABLE_CTORS:
+        return True
+    return False
+
+
+def _rl005_static(ctx: FileContext, node: ast.AST, pname) -> Finding:
+    return Finding(ctx.path, node.lineno, "RL005",
+                   f"unhashable literal for static arg {pname!r}: jit "
+                   "either raises or, via __eq__-based caching, silently "
+                   "retraces; pass a tuple")
+
+
+# int32-by-contract mirrors: device gather/scatter indices, block tables,
+# and spill checksums all assume these never widen to int64
+INT32_MIRRORS = {"cur_len", "last_tok", "tables"}
+_NP_CTORS = {"zeros", "ones", "full", "empty", "arange", "asarray", "array"}
+
+
+def check_rl006(ctx: FileContext) -> List[Finding]:
+    if not ctx.module.startswith("repro.serve"):
+        return []
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        for tgt in node.targets:
+            if (isinstance(tgt, ast.Attribute)
+                    and tgt.attr in INT32_MIRRORS
+                    and isinstance(tgt.value, ast.Name)):
+                bad = _np_ctor_not_int32(node.value)
+                if bad is not None:
+                    out.append(Finding(ctx.path, node.lineno, "RL006",
+                                       f"mirror {tgt.attr!r} constructed "
+                                       f"via np.{bad} without an explicit "
+                                       "np.int32 dtype (platform-default "
+                                       "int differs across hosts)"))
+    return out
+
+
+def _np_ctor_not_int32(value: ast.AST):
+    """Name of the np constructor when `value` builds an array without an
+    int32 dtype; None when int32 is explicit or the RHS isn't a fresh
+    np construction. Unwraps trailing .copy()/.astype(...)."""
+    while (isinstance(value, ast.Call)
+           and isinstance(value.func, ast.Attribute)
+           and value.func.attr in ("copy", "astype")):
+        if value.func.attr == "astype" and _mentions_int32(value):
+            return None
+        value = value.func.value
+    if not isinstance(value, ast.Call):
+        return None
+    name = dotted(value.func)
+    if name is None:
+        return None
+    head, _, tail = name.rpartition(".")
+    if head not in ("np", "numpy") or tail not in _NP_CTORS:
+        return None
+    return None if _mentions_int32(value) else tail
+
+
+def _mentions_int32(call: ast.Call) -> bool:
+    for sub in list(call.args) + [kw.value for kw in call.keywords]:
+        d = dotted(sub)
+        if d and d.rpartition(".")[2] == "int32":
+            return True
+    return False
+
+
+def check_rl008(ctx: FileContext) -> List[Finding]:
+    if ctx.module == "repro.debug_flags":
+        return []
+    out = []
+    for node in ast.walk(ctx.tree):
+        flag = None
+        if isinstance(node, ast.Subscript):  # os.environ["REPRO_X"]
+            if dotted(node.value) in ("os.environ", "environ"):
+                flag = _repro_const(node.slice)
+        elif isinstance(node, ast.Call):
+            fn = dotted(node.func)
+            if fn in ("os.getenv", "getenv") and node.args:
+                flag = _repro_const(node.args[0])
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr in ("get", "pop", "setdefault")
+                  and dotted(node.func.value) in ("os.environ", "environ")
+                  and node.args):
+                flag = _repro_const(node.args[0])
+        if flag:
+            out.append(Finding(ctx.path, node.lineno, "RL008",
+                               f"direct env read of {flag}; go through "
+                               "repro.debug_flags so every module sees "
+                               "the same parse"))
+    return out
+
+
+def _repro_const(node: ast.AST):
+    if (isinstance(node, ast.Constant) and isinstance(node.value, str)
+            and node.value.startswith("REPRO_")):
+        return node.value
+    return None

@@ -1,0 +1,90 @@
+"""RL004 / RL007 — kernel-contract and partitioning-placement rules.
+
+RL004  every `pl.pallas_call` site must be claimed by an entry in the
+       KERNEL_CONTRACTS registry (kernels/ops.py) declaring its jnp ref
+       oracle and the parity test that compares them. A kernel without a
+       registered oracle is an exactness claim nobody is checking.
+RL007  PartitionSpec literals constructed outside
+       distributed/partitioning.py scatter the placement contract; the
+       TP engine asserts placement against the helpers' output, so an
+       inline pspec that drifts fails at runtime on a 4-device host
+       only. Empty PartitionSpec() (fully replicated) is allowed — it
+       encodes no placement decision.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.core import FileContext, Finding, dotted
+
+
+def check_rl004(ctx: FileContext) -> List[Finding]:
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = dotted(node.func)
+        if fn is None or fn.rpartition(".")[2] != "pallas_call":
+            continue
+        wrapper = _enclosing_def_name(node)
+        entry = (ctx.registry or {}).get(wrapper)
+        if entry is None:
+            out.append(Finding(
+                ctx.path, node.lineno, "RL004",
+                f"pallas_call in {wrapper or '<module>'!s} has no "
+                "KERNEL_CONTRACTS entry in kernels/ops.py; declare its "
+                "ref oracle and parity test"))
+        elif entry.get("module") != ctx.module:
+            out.append(Finding(
+                ctx.path, node.lineno, "RL004",
+                f"KERNEL_CONTRACTS[{wrapper!r}] declares module "
+                f"{entry.get('module')!r} but the pallas_call lives in "
+                f"{ctx.module!r}; update the registry"))
+    return out
+
+
+def _enclosing_def_name(node: ast.AST):
+    cur = getattr(node, "_rl_parent", None)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return cur.name
+        cur = getattr(cur, "_rl_parent", None)
+    return None
+
+
+# spellings under which PartitionSpec is imported across the tree
+_PSPEC_NAMES = {"PartitionSpec", "P"}
+
+
+def check_rl007(ctx: FileContext) -> List[Finding]:
+    if ctx.module.startswith("repro.distributed"):
+        return []
+    # resolve local aliases: `from jax.sharding import PartitionSpec as P`
+    aliases = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.ImportFrom):
+            for a in node.names:
+                if a.name == "PartitionSpec":
+                    aliases.add(a.asname or a.name)
+    names = _PSPEC_NAMES | aliases
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = dotted(node.func)
+        if fn is None:
+            continue
+        if fn.rpartition(".")[2] not in names and fn not in (
+                "jax.sharding.PartitionSpec",):
+            continue
+        if fn.rpartition(".")[2] == "P" and "P" not in aliases:
+            continue  # bare P() only counts when P aliases PartitionSpec
+        if not node.args and not node.keywords:
+            continue  # PartitionSpec() == fully replicated: no decision
+        out.append(Finding(
+            ctx.path, node.lineno, "RL007",
+            "inline PartitionSpec with axes: placement decisions live in "
+            "distributed/partitioning.py helpers so the TP placement "
+            "asserts check one source of truth"))
+    return out

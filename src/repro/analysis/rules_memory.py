@@ -1,0 +1,223 @@
+"""RL002 / RL003 — jit-boundary memory-discipline rules.
+
+RL002  host mirrors (PR 5's deferred-transfer race): a numpy view handed
+       to / taken from a jit call can alias a buffer jax still owns (or
+       one the host is about to mutate); the transfer is async, so the
+       corruption is timing-dependent and survives every fast test. All
+       mirror traffic across the boundary goes through .copy() /
+       np.asarray-of-a-copy.
+RL003  donation (PR 8's retry bug): after `f(x)` with x donated, x's
+       buffer is deleted — a later read raises on GPU and, worse,
+       silently reads stale memory in some interpret paths. A donated
+       name may not be loaded again in the same scope unless it is
+       rebound first.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.core import (FileContext, Finding, dotted,
+                                 enclosing_statement, jit_info)
+
+# host-side mirror attributes of the engine/pool that shadow device state
+MIRROR_ATTRS = {"cur_len", "last_tok", "active", "tables"}
+# numpy constructors that materialize fresh host memory (not views)
+_FRESH_NP = {"zeros", "ones", "full", "empty", "asarray", "array",
+             "arange", "ascontiguousarray", "copy", "concatenate",
+             "stack", "where"}
+
+
+def check_rl002(ctx: FileContext) -> List[Finding]:
+    if not ctx.module.startswith("repro.serve"):
+        return []
+    out = []
+    for node in ast.walk(ctx.tree):
+        # (a) whole-mirror assignment: self.cur_len = <rhs> — the RHS must
+        # be freshly-owned host memory, not a view of a jit output
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if (isinstance(tgt, ast.Attribute)
+                        and tgt.attr in MIRROR_ATTRS
+                        and isinstance(tgt.value, ast.Name)
+                        and not _owns_memory(node.value)):
+                    out.append(Finding(
+                        ctx.path, node.lineno, "RL002",
+                        f"mirror {tgt.attr!r} assigned a possible view; "
+                        "route through .copy()/np.asarray so the host "
+                        "mirror never aliases a jit buffer"))
+        # (b) device upload: jnp.asarray(<expr over a mirror>) — the
+        # transfer is deferred, so the mirror must not be mutated before
+        # it lands; a .copy() at the boundary decouples them
+        elif isinstance(node, ast.Call):
+            fn = dotted(node.func)
+            if fn in ("jnp.asarray", "jnp.array", "jax.numpy.asarray",
+                      "jax.numpy.array") and node.args:
+                attr = _unprotected_mirror(node.args[0])
+                if attr is not None:
+                    out.append(Finding(
+                        ctx.path, node.lineno, "RL002",
+                        f"mirror {attr!r} uploaded to device without "
+                        ".copy(): the transfer is deferred and races "
+                        "with host mutation of the mirror"))
+    return out
+
+
+def _owns_memory(rhs: ast.AST) -> bool:
+    """True when the RHS provably materializes fresh host memory."""
+    if isinstance(rhs, ast.Call):
+        fn = dotted(rhs.func)
+        if fn:
+            head, _, tail = fn.rpartition(".")
+            if head in ("np", "numpy") and tail in _FRESH_NP:
+                return True
+            if tail in ("copy", "astype", "tolist", "item"):
+                return True
+        # any other call: a helper/factory returning its own array —
+        # the rule polices direct view-producing expressions, not
+        # interprocedural ownership
+        return True
+    if isinstance(rhs, (ast.Constant, ast.List, ast.Tuple, ast.Dict,
+                        ast.ListComp, ast.DictComp, ast.BinOp, ast.Compare,
+                        ast.IfExp, ast.BoolOp, ast.UnaryOp)):
+        return True  # scalars / fresh containers / computed arrays
+    if isinstance(rhs, ast.Subscript):
+        # advanced indexing (array/list index) copies; basic slicing views
+        idx = rhs.slice
+        return isinstance(idx, (ast.Name, ast.List, ast.Attribute, ast.Call))
+    if isinstance(rhs, (ast.Name, ast.Attribute)):
+        return False  # rebinding one mirror name to another: aliasing
+    return True
+
+
+def _unprotected_mirror(expr: ast.AST) -> Optional[str]:
+    """Mirror attr read inside a device-upload expression with no copy on
+    the path to it; None when protected or no mirror involved."""
+    protected_calls = {"copy", "astype"}
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Attribute) and node.attr in MIRROR_ATTRS:
+            cur = node
+            ok = False
+            while cur is not expr and cur is not None:
+                parent = getattr(cur, "_rl_parent", None)
+                if isinstance(parent, ast.Call):
+                    fn = dotted(parent.func)
+                    tail = fn.rpartition(".")[2] if fn else None
+                    # dotted() can't render `a[i:j].copy` (chain bottoms
+                    # in a Subscript) — fall back to the method name
+                    if tail is None and isinstance(parent.func,
+                                                   ast.Attribute):
+                        tail = parent.func.attr
+                    if tail in protected_calls or (
+                            fn and fn.rpartition(".")[0] in ("np", "numpy")
+                            and tail in _FRESH_NP):
+                        ok = True
+                        break
+                if isinstance(parent, ast.Subscript):
+                    idx = parent.slice
+                    if isinstance(idx, (ast.Name, ast.List, ast.Call)):
+                        ok = True  # advanced indexing copies
+                        break
+                if (isinstance(parent, ast.Attribute)
+                        and parent.attr in protected_calls):
+                    cur = parent
+                    continue
+                cur = parent
+            if not ok:
+                return node.attr
+    return None
+
+
+def check_rl003(ctx: FileContext) -> List[Finding]:
+    # pass 1: module-local jitted defs with donated params
+    donors = {}
+    for node in ast.walk(ctx.tree):
+        info = jit_info(node)
+        if info and (info.donate_names or info.donate_nums):
+            donated = set(info.donate_names)
+            for i in info.donate_nums:
+                if i < len(info.params):
+                    donated.add(info.params[i])
+            donors[node.name] = (donated, info.params)
+    if not donors:
+        return []
+    out = []
+    for call in ast.walk(ctx.tree):
+        if not isinstance(call, ast.Call):
+            continue
+        callee = dotted(call.func)
+        callee = callee.rpartition(".")[2] if callee else None
+        if callee not in donors:
+            continue
+        donated_params, params = donors[callee]
+        donated_names = []
+        for i, arg in enumerate(call.args):
+            if isinstance(arg, ast.Starred):
+                # *args call sites hide the binding — out of scope for
+                # static checking; the dispatch retry paths that use
+                # them rebuild args per attempt by construction
+                continue
+            pname = params[i] if i < len(params) else None
+            if pname in donated_params and isinstance(arg, ast.Name):
+                donated_names.append(arg.id)
+        for kw in call.keywords:
+            if kw.arg in donated_params and isinstance(kw.value, ast.Name):
+                donated_names.append(kw.value.id)
+        if donated_names:
+            out.extend(_reads_after(ctx, call, donated_names, callee))
+    return out
+
+
+def _reads_after(ctx: FileContext, call: ast.Call, names: List[str],
+                 callee: str) -> List[Finding]:
+    stmt = enclosing_statement(call)
+    if stmt is None:
+        return []
+    parent = getattr(stmt, "_rl_parent", None)
+    body = None
+    for field in ("body", "orelse", "finalbody"):
+        seq = getattr(parent, field, None)
+        if isinstance(seq, list) and stmt in seq:
+            body = seq
+            break
+    if body is None:
+        return []
+    live = set(names)
+    # names rebound by the call's own statement are safe (y = f(x) with
+    # the result re-stored over x is the canonical donation idiom)
+    for tgt in _stored_names(stmt):
+        live.discard(tgt)
+    out = []
+    for later in body[body.index(stmt) + 1:]:
+        if not live:
+            break
+        loaded, stored = _loads_and_stores(later)
+        for name in sorted(live & loaded):
+            out.append(Finding(
+                ctx.path, later.lineno, "RL003",
+                f"{name!r} was donated to {callee}() and read again: "
+                "its buffer is deleted after the call (donation retry "
+                "bug class); rebuild the argument or drop the "
+                "donation"))
+            live.discard(name)
+        live -= stored
+    return out
+
+
+def _stored_names(stmt: ast.stmt) -> set:
+    stored = set()
+    for node in ast.walk(stmt):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            stored.add(node.id)
+    return stored
+
+
+def _loads_and_stores(stmt: ast.stmt):
+    loaded, stored = set(), set()
+    for node in ast.walk(stmt):
+        if isinstance(node, ast.Name):
+            if isinstance(node.ctx, ast.Load):
+                loaded.add(node.id)
+            elif isinstance(node.ctx, ast.Store):
+                stored.add(node.id)
+    return loaded, stored

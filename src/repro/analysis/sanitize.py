@@ -1,0 +1,153 @@
+"""Compile-count sanitizer: tracing events per (entry point, variant).
+
+JAX re-traces a jitted function whenever the (shape, dtype, static-arg)
+signature changes, so a Python-level side effect placed *inside* the jit
+body runs exactly once per compiled variant and never on cache hits.
+:func:`note_trace` exploits that: each engine jit entry point calls it at
+the top of its body with the shape-bucket/config values that legitimately
+key its cache (bucket width, batch, temperature, kernel impl, ...).
+Under ``REPRO_SANITIZE=1`` every compilation therefore increments a
+counter keyed ``(name, sorted(key items))`` — and a shape-bucketing leak
+(e.g. a raw length reaching a jit instead of its bucket) shows up as an
+unbounded stream of new keys instead of a silent 10x slowdown.
+
+Budget semantics: each key is one compiled variant, so the budget is
+**1 tracing per key**; a second tracing for the same key means the cache
+was defeated by something *outside* the key (weak-typed scalar flips,
+accidental new hashable statics) and is exactly the regression class
+this is built to catch.
+
+CLI (``python -m repro.analysis.sanitize``): builds a tiny model, replays
+the seeded bursty trace from serve/traffic.py, then replays it again on
+a fresh engine in the same process — the second pass must add **zero**
+new tracings (every bucket was already compiled) and no key may exceed
+the budget. Exits nonzero otherwise. CI runs this in the
+static-analysis job.
+"""
+from __future__ import annotations
+
+import sys
+from collections import Counter
+from typing import Dict, Optional, Tuple
+
+from repro.debug_flags import sanitize_enabled
+
+Key = Tuple[str, Tuple[Tuple[str, object], ...]]
+
+_trace_counts: Counter = Counter()
+
+
+def note_trace(name: str, **key) -> None:
+    """Record one tracing of jit entry point `name` for the cache variant
+    described by `key`. Call from *inside* the jit body: the side effect
+    fires at trace time only. No-op (one bool check) unless
+    REPRO_SANITIZE=1, so the hot path pays nothing in production."""
+    if not sanitize_enabled():
+        return
+    _trace_counts[(name, tuple(sorted(key.items())))] += 1
+
+
+def trace_counts() -> Dict[Key, int]:
+    return dict(_trace_counts)
+
+
+def reset_trace_counts() -> None:
+    _trace_counts.clear()
+
+
+def new_traces(baseline: Dict[Key, int]) -> Dict[Key, int]:
+    """Tracings that happened since `baseline` (a trace_counts() snapshot):
+    {key: extra count}. Empty means the compile cache fully absorbed the
+    workload — the steady-state invariant."""
+    return {k: c - baseline.get(k, 0) for k, c in _trace_counts.items()
+            if c > baseline.get(k, 0)}
+
+
+def budget_violations(max_per_key: int = 1) -> Dict[Key, int]:
+    """Keys traced more than `max_per_key` times. The key *is* the
+    compile-cache signature we intend, so >1 means something outside the
+    key forced a retrace."""
+    return {k: c for k, c in _trace_counts.items() if c > max_per_key}
+
+
+def format_report(baseline: Optional[Dict[Key, int]] = None) -> str:
+    lines = [f"sanitize: {sum(_trace_counts.values())} tracings across "
+             f"{len(_trace_counts)} compiled variants"]
+    for (name, key), count in sorted(_trace_counts.items()):
+        kv = ", ".join(f"{k}={v}" for k, v in key)
+        lines.append(f"  {name}({kv}): {count}")
+    if baseline is not None:
+        fresh = new_traces(baseline)
+        lines.append(f"sanitize: {sum(fresh.values())} new tracings since "
+                     "baseline" + ("" if fresh else " (cache-stable)"))
+    return "\n".join(lines)
+
+
+def _build_engine():
+    # deferred imports: the sanitizer CLI needs jax + the engine, but
+    # note_trace() must stay importable from anywhere without them
+    import jax
+
+    from repro.configs import TINY
+    from repro.models.transformer import init_lm
+
+    cfg = TINY.replace(n_repeats=2, d_model=64, head_dim=16, d_ff=128)
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def main(argv=None) -> int:
+    import os
+
+    # the sanitizer CLI is the one legitimate writer of its own flag
+    os.environ.setdefault("REPRO_SANITIZE", "1")  # repro-lint: disable=RL008
+    if not sanitize_enabled():
+        print("sanitize: REPRO_SANITIZE is explicitly disabled", flush=True)
+        return 2
+    from repro.serve.engine import ContinuousEngine
+    from repro.serve.traffic import make_trace, replay
+
+    cfg, params = _build_engine()
+    trace = make_trace(kind="bursty", n=24, seed=0,
+                       vocab_size=cfg.vocab_size)
+
+    reset_trace_counts()
+    eng = ContinuousEngine(cfg, params, n_slots=4)
+    replay(eng, trace)
+    first = trace_counts()
+    print(format_report(), flush=True)
+
+    # second replay, fresh engine, same process: the jit caches are
+    # process-global, so every variant must already be compiled
+    eng2 = ContinuousEngine(cfg, params, n_slots=4)
+    replay(eng2, trace)
+    fresh = new_traces(first)
+    over = budget_violations(max_per_key=1)
+
+    ok = True
+    if fresh:
+        ok = False
+        print(f"sanitize: FAIL — {sum(fresh.values())} new tracings on "
+              "second replay (compile cache defeated):")
+        for (name, key), count in sorted(fresh.items()):
+            kv = ", ".join(f"{k}={v}" for k, v in key)
+            print(f"  {name}({kv}): +{count}")
+    if over:
+        ok = False
+        print("sanitize: FAIL — per-variant compile budget (1) exceeded:")
+        for (name, key), count in sorted(over.items()):
+            kv = ", ".join(f"{k}={v}" for k, v in key)
+            print(f"  {name}({kv}): {count}")
+    if ok:
+        print("sanitize: OK — second replay added zero tracings and every "
+              "variant compiled exactly once")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    # under `python -m` this file runs as __main__ while the engine's
+    # `from repro.analysis.sanitize import note_trace` loads the canonical
+    # module instance — two copies of _trace_counts. Delegate to the
+    # canonical one so the counts the engine writes are the counts we read.
+    from repro.analysis.sanitize import main as _main
+    sys.exit(_main())

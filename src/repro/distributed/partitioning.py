@@ -14,7 +14,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core.quant.types import QuantizedTensor, pack_layout
-from repro.distributed.sharding import DEFAULT_RULES, _axis_size, spec_for
+from repro.distributed.sharding import (DEFAULT_RULES, TP_AXIS, _axis_size,
+                                        spec_for)
 from repro.models.config import ModelConfig
 
 # (path regex, logical names per trailing dim). First match wins. Names are
@@ -273,6 +274,60 @@ def serve_tp_widths(cfg: ModelConfig) -> list[int]:
         return True
 
     return [tp for tp in range(1, cfg.n_heads + 1) if ok(tp)]
+
+
+def moe_ep_dispatch_pspecs(daxes: tuple):
+    """shard_map specs for the expert-parallel MoE dispatch
+    (models/moe_shardmap.py): tokens batch-sharded over the data axes and
+    replicated over "model" (each model rank slices its 1/M of the local
+    tokens inside the body), router replicated, expert weight stacks
+    sharded over "model" on the expert dim, output token-major like the
+    input with a replicated aux scalar."""
+    tok = PartitionSpec(daxes or None, None, None)
+    expert = PartitionSpec("model", None, None)
+    in_specs = (tok, PartitionSpec(None, None), expert, expert, expert)
+    out_specs = (tok, PartitionSpec())
+    return in_specs, out_specs
+
+
+def paged_pool_pspecs(cache, mesh, axis: str = TP_AXIS):
+    """PartitionSpec tree sharding every paged KV pool along its kv-head dim.
+
+    The placement contract for tensor-parallel serving: value pools
+    ``(..., P, page, KVH, hd)`` shard KVH over `axis` (dim ndim-2), scale
+    pools ``(..., P, page, KVH)`` likewise (dim ndim-1); the page axes are
+    NEVER sharded — every shard holds its head slice of *every* page, so
+    block tables, fill counts, and the scheduler's page budget are
+    shard-invariant. Pools whose head dim the axis cannot divide (the MLA
+    latent pool has KVH == 1 — per-token latent, no head dim to split)
+    come out replicated, as does every non-pool leaf (Mamba state is not
+    paged and TP serving gates SSM archs off upstream).
+
+    Lives here (not serve/kvcache.py) because this file is the single
+    source of placement truth — repro-lint RL007 rejects PartitionSpec
+    literals everywhere else; the pool *layout* rule it consults
+    (POOL_KEYS / pool_head_dim) stays with the pools.
+    """
+    from repro.serve.kvcache import POOL_KEYS, pool_head_dim
+
+    size = mesh.shape[axis]
+
+    def leaf_spec(key, leaf):
+        nd = getattr(leaf, "ndim", 0)
+        if key not in POOL_KEYS:
+            return PartitionSpec()
+        hdim = pool_head_dim(key, nd)
+        if leaf.shape[hdim] % size:
+            return PartitionSpec()
+        return PartitionSpec(*(axis if d == hdim else None
+                               for d in range(nd)))
+
+    def walk(tree, key=None):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        return leaf_spec(key, tree)
+
+    return walk(cache)
 
 
 def batch_shardings(mesh, tree, names_map: dict) -> dict:

@@ -40,9 +40,11 @@ import time
 import jax
 import numpy as np
 
+from repro.analysis import sanitize
 from repro.configs import get_config, get_smoke_config, list_archs
 from repro.core.calibration.generator import generate_calibration
 from repro.core.normtweak.pipeline import NTConfig, norm_tweak_ptq
+from repro.debug_flags import sanitize_enabled
 from repro.distributed.partitioning import rules_for_config
 from repro.distributed.sharding import sharding_ctx
 from repro.models.transformer import init_lm
@@ -218,6 +220,14 @@ def run_continuous(cfg, params, work, args):
         print(f"  accepted len  mean {st['mean_accepted_len']:.2f} "
               f"tokens/slot-round, per slot "
               f"{st['per_slot_mean_accepted_len']}")
+    if sanitize_enabled():
+        # REPRO_SANITIZE=1: show which jit variants this run compiled and
+        # whether any cache-key leak forced a variant to retrace
+        print(sanitize.format_report())
+        over = sanitize.budget_violations(max_per_key=1)
+        if over:
+            print(f"  WARNING: {len(over)} variant(s) exceeded the "
+                  "per-variant compile budget (see repro.analysis.sanitize)")
     print("request 0:", done[0].tokens)
 
 

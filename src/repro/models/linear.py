@@ -20,7 +20,6 @@ regime). Other act_bits values keep the legacy per-tensor fake-quant.
 """
 from __future__ import annotations
 
-import os
 from typing import Any
 
 import jax
@@ -29,12 +28,13 @@ import jax.numpy as jnp
 from repro.core.quant.types import (QuantizedTensor, dequantize,
                                     fake_quant_activation,
                                     quantize_activation)
+from repro.debug_flags import dequant_impl
 
 _KERNEL_BITS = (2, 3, 4, 8)
 
 
 def _use_pallas() -> bool:
-    force = os.environ.get("REPRO_DEQUANT_IMPL", "")
+    force = dequant_impl()
     if force == "pallas":
         return True
     if force == "ref":

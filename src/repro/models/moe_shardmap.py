@@ -21,9 +21,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.distributed.partitioning import moe_ep_dispatch_pspecs
 from repro.models.config import ModelConfig
 from repro.models.linear import dense
 
@@ -102,12 +102,7 @@ def moe_ep_shardmap(cfg: ModelConfig, p: dict, x: jax.Array, mesh,
         aux = jax.lax.pmean(aux, "model")
         return y_full.reshape(xb.shape), aux
 
-    in_specs = (P(daxes or None, None, None),            # x
-                P(None, None),                           # router (replicated)
-                P("model", None, None),                  # wi
-                P("model", None, None),                  # wg
-                P("model", None, None))                  # wo
-    out_specs = (P(daxes or None, None, None), P())
+    in_specs, out_specs = moe_ep_dispatch_pspecs(daxes)
     fn = shard_map(local, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs, check_rep=False)
     y, aux = fn(x, router_w, wi, wg, wo)

@@ -42,7 +42,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import os
 import zlib
 from typing import Optional, Sequence
 
@@ -52,8 +51,11 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.analysis.sanitize import note_trace
 from repro.core.quant.types import QuantizedTensor, localize_quantized
-from repro.distributed.partitioning import (serve_param_shardings,
+from repro.debug_flags import debug_enabled
+from repro.distributed.partitioning import (paged_pool_pspecs,
+                                            serve_param_shardings,
                                             serve_tp_widths, tp_local_cfg)
 from repro.distributed.sharding import TP_AXIS, sharding_ctx
 from repro.models.config import ModelConfig
@@ -61,8 +63,7 @@ from repro.models.transformer import (init_cache, lm_decode, lm_forward,
                                       lm_prefill, lm_verify)
 from repro.serve.faults import FaultInjected, FaultPlan
 from repro.serve.kvcache import (POOL_KEYS, PagePool, PageSpec,
-                                 default_page_spec, paged_pool_pspecs,
-                                 pool_head_dim)
+                                 default_page_spec, pool_head_dim)
 from repro.serve.sampling import (sample, spec_accept_greedy,
                                   spec_accept_sample)
 from repro.serve.scheduler import Request, Scheduler
@@ -80,6 +81,11 @@ class GenerateResult:
 def _generate_jit(cfg, params, prompts, key, max_new, temperature, top_k,
                   eos_id):
     b, s = prompts.shape
+    # note_trace calls sit inside jit bodies on purpose: the Python side
+    # effect runs once per compilation and never on cache hits, so under
+    # REPRO_SANITIZE=1 they count compiled variants (repro.analysis.sanitize)
+    note_trace("generate", batch=b, prompt=s, max_new=max_new,
+               temperature=temperature, top_k=top_k)
     cache = init_cache(cfg, b, s + max_new)
     logits, cache = lm_prefill(cfg, params, prompts, cache)
 
@@ -156,9 +162,24 @@ class ServeEngine:
 
 # ------------------------------------------------------- continuous batching
 
+def _params_sig(params) -> str:
+    """Coarse weight signature for sanitizer trace keys: the quantized
+    bit-widths present in the tree ("w2", "w4/8"), or "f32". Target and
+    draft params reach the same jits with different leaf shapes — without
+    this in the key, their two legitimate compilations would read as one
+    variant traced twice (a false budget violation)."""
+    leaves = jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    bits = sorted({x.bits for x in leaves if isinstance(x, QuantizedTensor)})
+    return "w" + "/".join(map(str, bits)) if bits else "f32"
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",),
                    donate_argnames=("cache",))
 def _paged_prefill_jit(cfg, params, tokens, cache, positions, paged):
+    note_trace("paged_prefill", batch=tokens.shape[0],
+               bucket=tokens.shape[1], impl=cfg.paged_attn_impl,
+               w=_params_sig(params))
     return lm_prefill(cfg, params, tokens, cache, positions=positions,
                       paged=paged)
 
@@ -173,6 +194,8 @@ def _sample_first_jit(logits, keys, *, temperature, top_k):
     prefill_batch=1 and prefill_batch=8. Also returns the per-row isfinite
     sentinel so a prompt whose prefill produced non-finite logits is
     quarantined before it ever enters the decode set."""
+    note_trace("sample_first", batch=logits.shape[0],
+               temperature=temperature, top_k=top_k)
     toks = jax.vmap(lambda l, k: sample(l[None], k, temperature=temperature,
                                         top_k=top_k)[0])(logits, keys)
     return toks, jnp.all(jnp.isfinite(logits), axis=-1)
@@ -238,6 +261,8 @@ def _corrupt_first_leaf(tree):
 def _spill_gather_jit(cache, idx):
     """Gather pages `idx` (P,) from every pool leaf -> host-bound tree
     with a leading/inner page dim of len(idx); non-pool leaves drop."""
+    note_trace("spill_gather", pages=idx.shape[0])
+
     def walk(tree, key=None):
         if isinstance(tree, dict):
             return {k: walk(v, k) for k, v in tree.items()}
@@ -251,6 +276,8 @@ def _spill_gather_jit(cache, idx):
 def _spill_scatter_jit(cache, idx, host):
     """Scatter a spill snapshot back: write host[...] into pages `idx` of
     every pool leaf (inverse of _spill_gather_jit)."""
+    note_trace("spill_scatter", pages=idx.shape[0])
+
     def walk(tree, htree, key=None):
         if isinstance(tree, dict):
             return {k: walk(v, htree[k], k) for k, v in tree.items()}
@@ -339,6 +366,9 @@ def _decode_scan(cfg, params, cache, last_tok, cur_len, active,
 def _paged_decode_scan_jit(cfg, params, cache, last_tok, cur_len, active,
                            block_table, key, poison, *, k_steps, page_size,
                            temperature, top_k):
+    note_trace("paged_decode_scan", k=k_steps, slots=block_table.shape[0],
+               width=block_table.shape[1], temperature=temperature,
+               top_k=top_k, impl=cfg.paged_attn_impl, w=_params_sig(params))
     return _decode_scan(cfg, params, cache, last_tok, cur_len, active,
                         block_table, key, k_steps=k_steps,
                         page_size=page_size, temperature=temperature,
@@ -370,6 +400,10 @@ def _spec_block_jit(cfg, params, draft_params, cache, draft_cache, last_tok,
     emits out[s, :n_emit[s]].
     """
     n_slots = block_table.shape[0]
+    note_trace("spec_block", k=k_steps, slots=n_slots,
+               width=block_table.shape[1], temperature=temperature,
+               top_k=top_k, impl=cfg.paged_attn_impl,
+               w=_params_sig(params), dw=_params_sig(draft_params))
     kd, kv = jax.random.split(key)
     m = k_steps + 1
     draft = _decode_scan(cfg, draft_params, draft_cache, last_tok, cur_len,
@@ -424,6 +458,9 @@ def _tp_in_specs(cfg, mesh, params, cache, paged):
 @functools.partial(jax.jit, static_argnames=("cfg", "mesh"),
                    donate_argnames=("cache",))
 def _paged_prefill_tp_jit(cfg, mesh, params, tokens, cache, positions, paged):
+    note_trace("paged_prefill_tp", batch=tokens.shape[0],
+               bucket=tokens.shape[1], tp=cfg.tp, impl=cfg.paged_attn_impl,
+               w=_params_sig(params))
     lcfg = tp_local_cfg(cfg)
     rep = PartitionSpec()
     pspecs, cspecs, paged_specs = _tp_in_specs(cfg, mesh, params, cache, paged)
@@ -447,6 +484,10 @@ def _paged_prefill_tp_jit(cfg, mesh, params, tokens, cache, positions, paged):
 def _paged_decode_scan_tp_jit(cfg, mesh, params, cache, last_tok, cur_len,
                               active, block_table, key, poison, *, k_steps,
                               page_size, temperature, top_k):
+    note_trace("paged_decode_scan_tp", k=k_steps,
+               slots=block_table.shape[0], width=block_table.shape[1],
+               tp=cfg.tp, temperature=temperature, top_k=top_k,
+               impl=cfg.paged_attn_impl, w=_params_sig(params))
     lcfg = tp_local_cfg(cfg)
     rep = PartitionSpec()
     pspecs, cspecs, _ = _tp_in_specs(cfg, mesh, params, cache, {})
@@ -720,7 +761,9 @@ class ContinuousEngine:
         self.n_steps_total = 0       # step() call count — fault step index
         # ------------------------------------------------ fault tolerance
         self.faults = faults         # FaultPlan consumed by _apply_faults
-        self.debug = os.environ.get("REPRO_DEBUG", "") == "1"
+        # snapshot at construction (tests toggle it per-instance); the
+        # env is read through the debug_flags funnel, never directly
+        self.debug = debug_enabled()
         self.n_kernel_fallbacks = 0  # fused -> gather decode retries
         self.n_spill_corruptions = 0     # corruption faults injected
         self.n_spill_checksum_fails = 0  # ... caught at restore time

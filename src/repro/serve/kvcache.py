@@ -545,41 +545,6 @@ def pool_head_dim(key: str, ndim: int) -> int:
     return ndim - 2 if key in ("k_pool", "v_pool") else ndim - 1
 
 
-def paged_pool_pspecs(cache, mesh, axis: str = "model"):
-    """PartitionSpec tree sharding every paged KV pool along its kv-head dim.
-
-    The placement contract for tensor-parallel serving: value pools
-    ``(..., P, page, KVH, hd)`` shard KVH over `axis` (dim ndim-2), scale
-    pools ``(..., P, page, KVH)`` likewise (dim ndim-1); the page axes are
-    NEVER sharded — every shard holds its head slice of *every* page, so
-    block tables, fill counts, and the scheduler's page budget are
-    shard-invariant. Pools whose head dim the axis cannot divide (the MLA
-    latent pool has KVH == 1 — per-token latent, no head dim to split)
-    come out replicated, as does every non-pool leaf (Mamba state is not
-    paged and TP serving gates SSM archs off upstream).
-    """
-    from jax.sharding import PartitionSpec
-
-    size = mesh.shape[axis]
-
-    def leaf_spec(key, leaf):
-        nd = getattr(leaf, "ndim", 0)
-        if key not in POOL_KEYS:
-            return PartitionSpec()
-        hdim = pool_head_dim(key, nd)
-        if leaf.shape[hdim] % size:
-            return PartitionSpec()
-        return PartitionSpec(*(axis if d == hdim else None
-                               for d in range(nd)))
-
-    def walk(tree, key=None):
-        if isinstance(tree, dict):
-            return {k: walk(v, k) for k, v in tree.items()}
-        return leaf_spec(key, tree)
-
-    return walk(cache)
-
-
 def gather_pages(pool: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
     """pool: (P, ps, ...); block_table: (S, maxp) -> (S, maxp*ps, ...)."""
     s, mp = block_table.shape

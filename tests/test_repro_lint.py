@@ -1,0 +1,355 @@
+"""repro-lint golden fixtures: per rule, one minimal snippet that must
+trigger it and one near-miss that must pass, plus pragma suppression,
+the clean-run-over-src gate, and the RL004 registry coverage checks."""
+import ast
+import os
+import textwrap
+
+from repro.analysis.core import RULE_DOCS, module_name_for
+from repro.analysis.lint import (cross_check_registry, extract_registry,
+                                 iter_py_files, lint_paths, lint_source)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+TESTS = os.path.dirname(__file__)
+
+
+def codes(src, module, registry=None):
+    src = textwrap.dedent(src)
+    return {f.rule for f in lint_source(src, "fixture.py", module=module,
+                                        registry=registry)}
+
+
+# ------------------------------------------------------------------ RL001
+
+def test_rl001_trigger_wall_clock():
+    assert "RL001" in codes("""
+        import time
+        def step(self):
+            return time.time()
+        """, "repro.serve.engine")
+
+
+def test_rl001_trigger_stdlib_random():
+    assert "RL001" in codes("""
+        import random
+        def pick(xs):
+            return random.choice(xs)
+        """, "repro.kernels.ops")
+
+
+def test_rl001_trigger_unseeded_np_random():
+    assert "RL001" in codes("""
+        import numpy as np
+        def noise(n):
+            return np.random.rand(n)
+        """, "repro.serve.traffic")
+    assert "RL001" in codes("""
+        import numpy as np
+        def noise(n):
+            return np.random.default_rng().normal(size=n)
+        """, "repro.serve.traffic")
+
+
+def test_rl001_trigger_unordered_dict_iteration():
+    assert "RL001" in codes("""
+        def drain(self):
+            for slot in self._prefilling:
+                self.finish(slot)
+        """, "repro.serve.engine")
+
+
+def test_rl001_near_misses():
+    # sleep paces, seeded rng is sanctioned, sorted() normalizes order,
+    # and launch/ modules are outside the virtual-clock contract
+    assert "RL001" not in codes("""
+        import time
+        import numpy as np
+        def ok(self, seed):
+            time.sleep(0.01)
+            rng = np.random.default_rng(seed)
+            for slot in sorted(self._prefilling):
+                self.finish(slot)
+            return rng.normal()
+        """, "repro.serve.engine")
+    assert "RL001" not in codes("""
+        import time
+        def bench():
+            return time.time()
+        """, "repro.launch.serve")
+
+
+# ------------------------------------------------------------------ RL002
+
+def test_rl002_trigger_view_assignment():
+    assert "RL002" in codes("""
+        def sync(self, out):
+            self.cur_len = out
+        """, "repro.serve.engine")
+
+
+def test_rl002_trigger_upload_without_copy():
+    assert "RL002" in codes("""
+        import jax.numpy as jnp
+        def push(self):
+            return jnp.asarray(self.last_tok)
+        """, "repro.serve.engine")
+
+
+def test_rl002_near_misses():
+    assert "RL002" not in codes("""
+        import jax.numpy as jnp
+        import numpy as np
+        def push(self, width):
+            self.cur_len = np.asarray(self.cur_len, np.int32).copy()
+            a = jnp.asarray(self.last_tok.copy())
+            b = jnp.asarray(self.pool.tables[:, :width].copy())
+            c = jnp.asarray(self.pool.tables[slots])  # fancy index copies
+            return a, b, c
+        """, "repro.serve.engine")
+
+
+# ------------------------------------------------------------------ RL003
+
+def test_rl003_trigger_read_after_donation():
+    assert "RL003" in codes("""
+        import functools
+        import jax
+        @functools.partial(jax.jit, donate_argnames=("cache",))
+        def f(x, cache):
+            return cache
+        def g(y, cache):
+            out = f(y, cache)
+            return cache
+        """, "repro.serve.engine")
+
+
+def test_rl003_near_miss_rebound_result():
+    assert "RL003" not in codes("""
+        import functools
+        import jax
+        @functools.partial(jax.jit, donate_argnames=("cache",))
+        def f(x, cache):
+            return cache
+        def g(y, cache):
+            cache = f(y, cache)
+            return cache
+        """, "repro.serve.engine")
+
+
+# ------------------------------------------------------------------ RL004
+
+def test_rl004_trigger_unregistered_pallas_call():
+    assert "RL004" in codes("""
+        from jax.experimental import pallas as pl
+        def my_op_pallas(x):
+            return pl.pallas_call(lambda r, o: None)(x)
+        """, "repro.kernels.my_op", registry=None)
+
+
+def test_rl004_near_miss_registered_site():
+    registry = {"my_op_pallas": {
+        "module": "repro.kernels.my_op",
+        "ref": "repro.kernels.ref:my_op_ref",
+        "parity": ("tests/test_kernels.py::test_my_op",)}}
+    assert "RL004" not in codes("""
+        from jax.experimental import pallas as pl
+        def my_op_pallas(x):
+            return pl.pallas_call(lambda r, o: None)(x)
+        """, "repro.kernels.my_op", registry=registry)
+
+
+# ------------------------------------------------------------------ RL005
+
+def test_rl005_trigger_jit_in_loop():
+    assert "RL005" in codes("""
+        import jax
+        def run(xs):
+            for x in xs:
+                f = jax.jit(lambda a: a + 1)
+                f(x)
+        """, "repro.serve.engine")
+
+
+def test_rl005_trigger_unhashable_static():
+    assert "RL005" in codes("""
+        import functools
+        import jax
+        @functools.partial(jax.jit, static_argnames=("ks",))
+        def f(x, ks):
+            return x
+        def g(x):
+            return f(x, ks=[1, 2])
+        """, "repro.serve.engine")
+
+
+def test_rl005_near_misses():
+    assert "RL005" not in codes("""
+        import functools
+        import jax
+        f = jax.jit(lambda a: a + 1)
+        @functools.partial(jax.jit, static_argnames=("ks",))
+        def h(x, ks):
+            return x
+        def g(xs):
+            for x in xs:
+                f(x)
+            return h(xs[0], ks=(1, 2))
+        """, "repro.serve.engine")
+
+
+# ------------------------------------------------------------------ RL006
+
+def test_rl006_trigger_default_int_mirror():
+    assert "RL006" in codes("""
+        import numpy as np
+        def reset(self, n):
+            self.cur_len = np.zeros(n)
+        """, "repro.serve.engine")
+
+
+def test_rl006_near_miss_explicit_int32():
+    assert "RL006" not in codes("""
+        import numpy as np
+        def reset(self, n, spec):
+            self.cur_len = np.zeros(n, np.int32)
+            self.tables = np.full((n, spec), -1, np.int32)
+        """, "repro.serve.engine")
+
+
+# ------------------------------------------------------------------ RL007
+
+def test_rl007_trigger_inline_pspec():
+    assert "RL007" in codes("""
+        from jax.sharding import PartitionSpec
+        def specs():
+            return PartitionSpec("model", None)
+        """, "repro.serve.engine")
+    assert "RL007" in codes("""
+        from jax.sharding import PartitionSpec as P
+        def specs():
+            return P("model", None, None)
+        """, "repro.models.moe_shardmap")
+
+
+def test_rl007_near_misses():
+    # replicated () encodes no placement; partitioning.py is the one home
+    assert "RL007" not in codes("""
+        from jax.sharding import PartitionSpec
+        def specs():
+            return PartitionSpec()
+        """, "repro.serve.engine")
+    assert "RL007" not in codes("""
+        from jax.sharding import PartitionSpec
+        def specs():
+            return PartitionSpec("model", None)
+        """, "repro.distributed.partitioning")
+
+
+# ------------------------------------------------------------------ RL008
+
+def test_rl008_trigger_direct_env_read():
+    assert "RL008" in codes("""
+        import os
+        DEBUG = os.environ.get("REPRO_DEBUG", "") == "1"
+        """, "repro.serve.engine")
+    assert "RL008" in codes("""
+        import os
+        IMPL = os.getenv("REPRO_DEQUANT_IMPL")
+        """, "repro.kernels.ops")
+
+
+def test_rl008_near_misses():
+    assert "RL008" not in codes("""
+        import os
+        FLAGS = os.environ.get("XLA_FLAGS", "")
+        """, "repro.launch.dryrun")
+    assert "RL008" not in codes("""
+        import os
+        DEBUG = os.environ.get("REPRO_DEBUG", "") == "1"
+        """, "repro.debug_flags")
+
+
+# ------------------------------------------------------------------ pragma
+
+def test_pragma_suppresses_only_named_rule():
+    src = """
+        import os
+        A = os.environ.get("REPRO_DEBUG")  # repro-lint: disable=RL008
+        B = os.environ.get("REPRO_DEBUG")  # repro-lint: disable=RL001
+        C = os.environ.get("REPRO_DEBUG")
+        """
+    found = lint_source(textwrap.dedent(src), "fixture.py",
+                        module="repro.serve.engine")
+    lines = sorted(f.line for f in found if f.rule == "RL008")
+    assert lines == [4, 5]  # A suppressed; B names the wrong rule; C bare
+
+
+def test_pragma_on_preceding_line():
+    src = """
+        import os
+        # repro-lint: disable=RL008
+        A = os.environ.get("REPRO_DEBUG")
+        """
+    assert lint_source(textwrap.dedent(src), "fixture.py",
+                       module="repro.serve.engine") == []
+
+
+# ------------------------------------------------- tree-level acceptance
+
+def test_linter_runs_clean_on_src():
+    findings = lint_paths([SRC], tests=TESTS)
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_diagnostic_format_is_file_line_rule_message():
+    found = lint_source("import os\nX = os.getenv('REPRO_X')\n",
+                        "src/repro/serve/x.py")
+    assert len(found) == 1
+    path, line, rule = found[0].path, found[0].line, found[0].rule
+    assert found[0].format().startswith(f"{path}:{line} {rule} ")
+    assert rule in RULE_DOCS
+
+
+def test_registry_covers_every_pallas_call_site():
+    files = iter_py_files([SRC])
+    registry = extract_registry(files)
+    assert registry, "KERNEL_CONTRACTS literal missing from kernels/ops.py"
+    sites = {}
+    for path in files:
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        if "pallas_call" not in source:
+            continue
+        tree = ast.parse(source)
+        stack = [(tree, None)]
+        # map each pallas_call to its enclosing def name
+        def walk(node, fname):
+            for child in ast.iter_child_nodes(node):
+                nm = fname
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    nm = child.name
+                if (isinstance(child, ast.Call)
+                        and isinstance(child.func, ast.Attribute)
+                        and child.func.attr == "pallas_call"):
+                    sites[fname] = module_name_for(path)
+                walk(child, nm)
+        walk(tree, None)
+    assert sites, "no pallas_call sites found under src/"
+    for wrapper, mod in sorted(sites.items()):
+        assert wrapper in registry, f"unregistered pallas kernel {wrapper}"
+        assert registry[wrapper]["module"] == mod
+    for wrapper in registry:
+        assert wrapper in sites, f"stale registry entry {wrapper}"
+
+
+def test_registry_cross_check_is_clean_and_catches_breakage():
+    files = iter_py_files([SRC])
+    registry = extract_registry(files)
+    assert cross_check_registry(registry, files, TESTS) == []
+    # a dangling parity id / ref oracle must be reported
+    broken = dict(registry)
+    broken["ghost_pallas"] = {"module": "repro.kernels.ghost",
+                              "ref": "repro.kernels.ref:ghost_ref",
+                              "parity": ("tests/test_nope.py::test_x",)}
+    found = cross_check_registry(broken, files, TESTS)
+    assert any(f.rule == "RL004" for f in found)

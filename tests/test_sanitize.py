@@ -1,0 +1,79 @@
+"""Compile-count sanitizer: unit semantics of the trace counters and the
+replay-twice regression — the seeded bursty trace from serve/traffic.py
+run twice in one process must add zero tracings on the second replay
+(every shape bucket already compiled), with every variant compiled
+exactly once."""
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import sanitize
+from repro.configs import TINY
+from repro.models.transformer import init_lm
+from repro.serve.engine import ContinuousEngine
+from repro.serve.traffic import make_trace, replay
+
+CFG = TINY.replace(n_repeats=2, d_model=64, head_dim=16, d_ff=128)
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    return init_lm(CFG, jax.random.PRNGKey(0))
+
+
+def test_note_trace_is_gated_by_env(monkeypatch):
+    sanitize.reset_trace_counts()
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    sanitize.note_trace("op", bucket=16)
+    assert sanitize.trace_counts() == {}
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    sanitize.note_trace("op", bucket=16)
+    sanitize.note_trace("op", bucket=16)
+    sanitize.note_trace("op", bucket=32)
+    counts = sanitize.trace_counts()
+    assert counts[("op", (("bucket", 16),))] == 2
+    assert counts[("op", (("bucket", 32),))] == 1
+    sanitize.reset_trace_counts()
+
+
+def test_new_traces_and_budget(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    sanitize.reset_trace_counts()
+    sanitize.note_trace("op", bucket=16)
+    base = sanitize.trace_counts()
+    assert sanitize.new_traces(base) == {}
+    sanitize.note_trace("op", bucket=16)
+    assert sanitize.new_traces(base) == {("op", (("bucket", 16),)): 1}
+    assert sanitize.budget_violations(max_per_key=1) == {
+        ("op", (("bucket", 16),)): 2}
+    assert sanitize.budget_violations(max_per_key=2) == {}
+    sanitize.reset_trace_counts()
+
+
+def test_seeded_replay_twice_adds_zero_tracings(monkeypatch, tiny_lm):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    sanitize.reset_trace_counts()
+    trace = make_trace(kind="bursty", n=16, seed=0,
+                       vocab_size=CFG.vocab_size)
+
+    eng = ContinuousEngine(CFG, tiny_lm, n_slots=4)
+    rep1 = replay(eng, trace)
+    baseline = sanitize.trace_counts()
+
+    eng2 = ContinuousEngine(CFG, tiny_lm, n_slots=4)
+    rep2 = replay(eng2, trace)
+
+    fresh = sanitize.new_traces(baseline)
+    assert fresh == {}, (
+        "second replay of the identical seeded trace retraced: "
+        f"{sanitize.format_report(baseline)}")
+    # each variant key IS the intended compile-cache signature — tracing
+    # one twice means the cache was defeated by something outside the key
+    assert sanitize.budget_violations(max_per_key=1) == {}, \
+        sanitize.format_report()
+    # determinism ride-along: the replays must agree token-for-token
+    toks1 = [np.asarray(r.tokens) for r in rep1["requests"]]
+    toks2 = [np.asarray(r.tokens) for r in rep2["requests"]]
+    for a, b in zip(toks1, toks2):
+        np.testing.assert_array_equal(a, b)
+    sanitize.reset_trace_counts()
