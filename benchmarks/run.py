@@ -11,6 +11,8 @@ model) are cached under .cache/ — the first run trains it (~10 min CPU).
   table9  loss-function ablation                      (paper Table 9)
   fig1    per-layer activation-distribution gap       (paper Figure 1)
   kernels dequant-matmul microbench                   (deployment path)
+  autotune  measured tile search + cache behavior + warm-cache serving
+            (writes BENCH_autotune.json)
   quant_serve  quantized-vs-float serving + expert/W8A8 kernel rows
                (writes BENCH_quant_serve.json)
   spec    self-speculative decoding: W2/W3 draft + verify vs target-only
@@ -29,7 +31,7 @@ def main() -> None:
                     help="comma-separated table names (e.g. table2,fig1)")
     args = ap.parse_args()
 
-    from benchmarks import (fig1_distribution, kernels_bench,
+    from benchmarks import (autotune_bench, fig1_distribution, kernels_bench,
                             paged_attn_bench, quant_serve_bench, spec_bench,
                             table2_weight_only,
                             table3_runtime, table4_ptq_methods, table6_iters,
@@ -45,6 +47,7 @@ def main() -> None:
         "table10": table10_awq.run,
         "fig1": fig1_distribution.run,
         "kernels": kernels_bench.run,
+        "autotune": autotune_bench.run,
         "quant_serve": quant_serve_bench.run,
         "paged_attn": paged_attn_bench.run,
         "spec": spec_bench.run,

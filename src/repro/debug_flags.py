@@ -25,6 +25,14 @@ Flags:
   REPRO_DEQUANT_IMPL     "pallas" forces the Pallas lowering (interpret
                          mode on CPU), "ref" forces the jnp reference,
                          "" picks by backend
+  REPRO_AUTOTUNE         kernel tile selection (kernels/autotune.py):
+                         "" (default) uses the warm JSON cache when one is
+                         readable, else the deterministic fallback table;
+                         "0" always uses the table (CI / replay); "1"
+                         measures real pallas_call candidates and records
+                         the winners
+  REPRO_AUTOTUNE_CACHE   path of the autotune JSON config cache ("" = no
+                         on-disk cache: measured winners stay in-process)
 """
 from __future__ import annotations
 
@@ -40,11 +48,14 @@ class Flags:
     strict_kernels: bool
     sanitize: bool
     dequant_impl: str  # "", "pallas", or "ref"
+    autotune: str  # "", "0", or "1"
+    autotune_cache: str  # cache file path ("" = none)
 
 
 _ENV_KEYS = ("REPRO_DEBUG", "REPRO_STRICT_KERNELS", "REPRO_SANITIZE",
-             "REPRO_DEQUANT_IMPL")
+             "REPRO_DEQUANT_IMPL", "REPRO_AUTOTUNE", "REPRO_AUTOTUNE_CACHE")
 _VALID_IMPLS = ("", "pallas", "ref")
+_VALID_AUTOTUNE = ("", "0", "1")
 
 # (raw env tuple, parsed Flags) — rebuilt only when the raw values change,
 # so hot callers pay four dict lookups, not a dataclass construction
@@ -64,10 +75,17 @@ def flags() -> Flags:
                 f"REPRO_DEQUANT_IMPL={impl!r}: expected one of "
                 f"{_VALID_IMPLS} (typo'd values used to silently fall "
                 f"through to the backend default)")
+        tune = raw[4]
+        if tune not in _VALID_AUTOTUNE:
+            raise ValueError(
+                f"REPRO_AUTOTUNE={tune!r}: expected one of "
+                f"{_VALID_AUTOTUNE}")
         _cache = (raw, Flags(debug=raw[0] == "1",
                              strict_kernels=raw[1] == "1",
                              sanitize=raw[2] == "1",
-                             dequant_impl=impl))
+                             dequant_impl=impl,
+                             autotune=tune,
+                             autotune_cache=raw[5]))
     return _cache[1]
 
 
@@ -85,3 +103,11 @@ def sanitize_enabled() -> bool:
 
 def dequant_impl() -> str:
     return flags().dequant_impl
+
+
+def autotune_mode() -> str:
+    return flags().autotune
+
+
+def autotune_cache_path() -> str:
+    return flags().autotune_cache

@@ -3,10 +3,14 @@
 The deployment hot-spot of weight-only PTQ (the paper's serving story):
 y = x @ dequant(qw, scale). Packed uint8 weights stream HBM->VMEM at 1/2
 (W4), 3/16 (W3) or 1/4 (W2) of bf16 bytes; sub-byte fields are unpacked
-with lane-local shift/mask ops in VREGs (packing is along K, so no
-cross-lane movement — TPUs have no warp shuffles; W3 first reassembles its
-3-byte/8-value little-endian word), scaled per group, and fed to the MXU
-as (bk, bn) bf16 tiles via `jnp.dot(..., preferred_element_type=f32)`.
+with lane-local shift/mask ops in VREGs, scaled per group, and fed to the
+MXU as (bk, bn) bf16 tiles.
+
+Since the kernel-template refactor this module is a spec instance: the
+body, grid and block specs come from `kernels/template.py`
+(MatmulSpec(epilogue="dequant_bf16")); only the `pl.pallas_call` site —
+and with it the RL004 contract identity — lives here. See DESIGN.md
+"Kernel templates & autotuning".
 
 Grid: (M/bm, N/bn, K/bk), K innermost; the f32 output tile accumulates
 across the K steps in VMEM.
@@ -19,77 +23,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.quant.types import pack_layout, qmax_for_bits
+from repro.core.quant.types import pack_layout
+from repro.kernels.template import (MatmulSpec, matmul_grid, matmul_in_specs,
+                                    matmul_out_spec, make_matmul_kernel,
+                                    packed_tile_rows, scale_blockspec,
+                                    scale_tile, unpack_tile)
 
+# re-exported for the kernel modules (and tests) that historically imported
+# the shared packed-walk helpers from here; they live in template.py now
+__all__ = ["dequant_matmul_pallas", "packed_tile_rows", "scale_tile",
+           "unpack_tile", "_scale_blockspec"]
+_scale_blockspec = scale_blockspec
 
-def packed_tile_rows(bk: int, bits: int) -> int:
-    """uint8 rows of a packed tile holding bk values (bk % vpg == 0)."""
-    bpg, vpg = pack_layout(bits)
-    assert bk % vpg == 0, (bk, bits)
-    return bk // vpg * bpg
-
-
-def unpack_tile(qw: jax.Array, bits: int, bk: int) -> jax.Array:
-    """(packed_tile_rows(bk), bn) packed uint8 tile -> (bk, bn) int32 values
-    in [-qmax, qmax]. Lane-local shift/mask unpack (packing is along K, rows
-    interleave as r*vpg+i), shared by every dequant-style kernel."""
-    bpg, vpg = pack_layout(bits)
-    qmax = qmax_for_bits(bits)
-    bn = qw.shape[-1]
-    if (bpg, vpg) == (1, 1):
-        u = qw
-    else:
-        if bpg == 1:
-            word = qw
-        else:
-            # multi-byte group (W3): rebuild the little-endian word first
-            grp = qw.astype(jnp.uint32).reshape(bk // vpg, bpg, bn)
-            word = grp[:, 0, :]
-            for b in range(1, bpg):
-                word = word | (grp[:, b, :] << (8 * b))
-        mask = (1 << bits) - 1
-        parts = [(word >> (bits * i)) & mask for i in range(vpg)]
-        u = jnp.stack(parts, axis=1).reshape(bk, bn)
-    return u.astype(jnp.int32) - qmax
-
-
-def scale_tile(q: jax.Array, s: jax.Array, bk: int) -> jax.Array:
-    """Apply a (gb, bn) group-scale block to a (bk, bn) int tile -> f32."""
-    gb, bn = s.shape
-    if gb == 1:
-        return q.astype(jnp.float32) * s
-    return (q.reshape(gb, bk // gb, bn).astype(jnp.float32) *
-            s[:, None, :]).reshape(bk, bn)
-
-
-def _dequant_matmul_kernel(x_ref, qw_ref, scale_ref, o_ref, *, bits: int,
-                           group_size: int, bk: int):
-    k_step = pl.program_id(2)
-
-    @pl.when(k_step == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    q = unpack_tile(qw_ref[...], bits, bk)             # (bk, bn) int32
-    w = scale_tile(q, scale_ref[...], bk)              # (bk, bn) f32
-    x = x_ref[...]                                     # (bm, bk)
-    o_ref[...] += jnp.dot(x.astype(jnp.bfloat16),
-                          w.astype(jnp.bfloat16),
-                          preferred_element_type=jnp.float32)
-
-
-def _scale_blockspec(group_size: int, k: int, g: int, bk: int, bn: int):
-    if g == 1:
-        return pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
-    gs = k // g
-    if gs >= bk:
-        assert gs % bk == 0
-        return pl.BlockSpec((1, bn), lambda i, j, kk: (kk * bk // gs, j))
-    assert bk % gs == 0
-    gpb = bk // gs
-    # index_map is in BLOCK units: kv-block kk covers scale rows
-    # [kk*gpb, (kk+1)*gpb) == block row kk of a (gpb, bn) block
-    return pl.BlockSpec((gpb, bn), lambda i, j, kk: (kk, j))
+_SPEC = MatmulSpec("dequant_matmul", epilogue="dequant_bf16")
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "group_size", "bm", "bn",
@@ -109,19 +55,13 @@ def dequant_matmul_pallas(x: jax.Array, qw: jax.Array, scale: jax.Array, *,
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
     assert bk % vpg == 0
 
-    grid = (m // bm, n // bn, k // bk)
-    kernel = functools.partial(_dequant_matmul_kernel, bits=bits,
-                               group_size=group_size, bk=bk)
+    dims = dict(k=k, g=g, bm=bm, bn=bn, bk=bk)
     return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((packed_tile_rows(bk, bits), bn),
-                         lambda i, j, kk: (kk, j)),
-            _scale_blockspec(group_size, k, g, bk, bn),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        make_matmul_kernel(_SPEC, bits=bits, bk=bk),
+        grid=matmul_grid(_SPEC, e=1, m=m, n=n, k=k, bm=bm, bn=bn, bk=bk),
+        in_specs=matmul_in_specs(_SPEC, bits=bits, group_size=group_size,
+                                 **dims),
+        out_specs=matmul_out_spec(_SPEC, bm=bm, bn=bn),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
     )(x, qw, scale.astype(jnp.float32))

@@ -1,17 +1,17 @@
 """Pallas TPU kernel: expert-batched fused low-bit dequantize + matmul.
 
 The MoE serving hot-spot: every expert's packed weight slab is consumed
-directly from the stacked (E, packed_rows(K), N) layout, so a quantized Mixtral/
-DeepSeek/Jamba MoE block never materializes a float (E, K, N) expert stack
-in HBM (the former `dequantize`-then-einsum path did exactly that, and at
-W4 the float stack is 4x the packed bytes).
+directly from the stacked (E, packed_rows(K), N) layout, so a quantized
+Mixtral/DeepSeek/Jamba MoE block never materializes a float (E, K, N)
+expert stack in HBM (the former `dequantize`-then-einsum path did exactly
+that, and at W4 the float stack is 4x the packed bytes).
 
-Grid: (E, M/bm, N/bn, K/bk) with K innermost; each (e, i, j) output tile
-accumulates across K steps in VMEM, and the expert dimension is the
-outermost loop so one expert's packed tiles stream HBM->VMEM while the
-previous expert's tail is still in flight. Per-tile math (unpack nibbles
-lane-locally, scale per group, bf16 MXU dot) is identical to the dense
-kernel in dequant_matmul.py.
+Template instance: MatmulSpec(expert_dim=True, epilogue="dequant_bf16") —
+the dense dequant body and block specs from `kernels/template.py`, lifted
+over a leading expert grid axis. Grid: (E, M/bm, N/bn, K/bk), K innermost;
+each (e, i, j) output tile accumulates across K steps in VMEM, and the
+expert dimension is the outermost loop so one expert's packed tiles stream
+HBM->VMEM while the previous expert's tail is still in flight.
 """
 from __future__ import annotations
 
@@ -21,32 +21,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.dequant_matmul import (_scale_blockspec, packed_tile_rows,
-                                          scale_tile, unpack_tile)
+from repro.kernels.template import (MatmulSpec, matmul_grid, matmul_in_specs,
+                                    matmul_out_spec, make_matmul_kernel)
 
-
-def _expert_dequant_matmul_kernel(x_ref, qw_ref, scale_ref, o_ref, *,
-                                  bits: int, group_size: int, bk: int):
-    k_step = pl.program_id(3)
-
-    @pl.when(k_step == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    q = unpack_tile(qw_ref[0], bits, bk)               # (bk, bn) int32
-    w = scale_tile(q, scale_ref[0], bk)                # (bk, bn) f32
-    x = x_ref[0]                                       # (bm, bk)
-    o_ref[0] += jnp.dot(x.astype(jnp.bfloat16),
-                        w.astype(jnp.bfloat16),
-                        preferred_element_type=jnp.float32)
-
-
-def _expert_scale_blockspec(group_size: int, k: int, g: int, bk: int, bn: int):
-    """The dense `_scale_blockspec` lifted over the leading expert grid
-    axis: same (G, N) indexing, stacked (E, G, N) layout."""
-    s = _scale_blockspec(group_size, k, g, bk, bn)
-    return pl.BlockSpec((1,) + tuple(s.block_shape),
-                        lambda e, i, j, kk: (e,) + tuple(s.index_map(i, j, kk)))
+_SPEC = MatmulSpec("expert_dequant_matmul", epilogue="dequant_bf16",
+                   expert_dim=True)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "group_size", "bm", "bn",
@@ -65,20 +44,14 @@ def expert_dequant_matmul_pallas(x: jax.Array, qw: jax.Array,
     bk = min(bk, k)
     bn = min(bn, n)
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
-    pk = packed_tile_rows(bk, bits)
 
-    grid = (e, m // bm, n // bn, k // bk)
-    kernel = functools.partial(_expert_dequant_matmul_kernel, bits=bits,
-                               group_size=group_size, bk=bk)
+    dims = dict(k=k, g=g, bm=bm, bn=bn, bk=bk)
     return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bm, bk), lambda e_, i, j, kk: (e_, i, kk)),
-            pl.BlockSpec((1, pk, bn), lambda e_, i, j, kk: (e_, kk, j)),
-            _expert_scale_blockspec(group_size, k, g, bk, bn),
-        ],
-        out_specs=pl.BlockSpec((1, bm, bn), lambda e_, i, j, kk: (e_, i, j)),
+        make_matmul_kernel(_SPEC, bits=bits, bk=bk),
+        grid=matmul_grid(_SPEC, e=e, m=m, n=n, k=k, bm=bm, bn=bn, bk=bk),
+        in_specs=matmul_in_specs(_SPEC, bits=bits, group_size=group_size,
+                                 **dims),
+        out_specs=matmul_out_spec(_SPEC, bm=bm, bn=bn),
         out_shape=jax.ShapeDtypeStruct((e, m, n), jnp.float32),
         interpret=interpret,
     )(x, qw, scale.astype(jnp.float32))

@@ -5,12 +5,14 @@ via REPRO_DEQUANT_IMPL=pallas (tests), else the jnp reference (same math,
 fast on CPU). Handles token-dim padding and block-size selection so callers
 never deal with tiling constraints.
 
-Block-size selection has two regimes (see DESIGN.md "Quantized serving
-fast paths"): prefill-shaped calls (M > 8) use square-ish tiles, while
-decode-shaped skinny-M calls (M <= 8 — one token per serving slot) keep
-bm at the minimal 8-row tile and widen bn/bk instead, so per-step decode
-streams more packed weight bytes per grid step instead of padding tokens
-up to prefill tiles.
+Block-size selection consults `kernels/autotune.py` per shape class: a
+measured JSON config cache when warm, else the deterministic fallback
+table (the former hand heuristics — see DESIGN.md "Kernel templates &
+autotuning"). The table has two regimes: prefill-shaped calls (M > 8) use
+square-ish tiles, while decode-shaped skinny-M calls (M <= 8 — one token
+per serving slot) keep bm at the minimal 8-row tile and widen bn/bk
+instead, so per-step decode streams more packed weight bytes per grid
+step instead of padding tokens up to prefill tiles.
 """
 from __future__ import annotations
 
@@ -20,10 +22,11 @@ import jax.numpy as jnp
 from repro.core.quant.types import (QuantizedTensor, pack_layout,
                                     quantize_activation)
 from repro.debug_flags import dequant_impl, strict_kernels
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 from repro.kernels.channel_stats import channel_stats_pallas
 from repro.kernels.dequant_matmul import dequant_matmul_pallas
 from repro.kernels.expert_dequant_matmul import expert_dequant_matmul_pallas
+from repro.kernels.expert_w8a8_matmul import expert_w8a8_matmul_pallas
 from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.quantize import quantize_pack_pallas
 from repro.kernels.w8a8_matmul import w8a8_matmul_pallas
@@ -52,6 +55,11 @@ KERNEL_CONTRACTS = {
         "ref": "repro.kernels.ref:w8a8_matmul_ref",
         "parity": ("tests/test_kernel_parity.py::test_w8a8_parity",),
     },
+    "expert_w8a8_matmul_pallas": {
+        "module": "repro.kernels.expert_w8a8_matmul",
+        "ref": "repro.kernels.ref:expert_w8a8_matmul_ref",
+        "parity": ("tests/test_kernel_parity.py::test_expert_w8a8_parity",),
+    },
     "quantize_pack_pallas": {
         "module": "repro.kernels.quantize",
         "ref": "repro.kernels.ref:quantize_pack_ref",
@@ -68,76 +76,33 @@ KERNEL_CONTRACTS = {
         "parity": (
             "tests/test_kernel_parity.py::test_paged_attention_parity",
             "tests/test_kernel_parity.py::test_paged_attention_verify_parity",
+            "tests/test_kernel_parity.py::test_paged_attention_prefill_parity",
         ),
     },
 }
 
-# decode-shaped tiles: minimal token rows, wide weight tiles
-_SKINNY_M = 8
-_SKINNY_BN = 512
-_SKINNY_BK = 512
-
-# paged-attention read-width regime: the page walk streams one KV tile per
-# grid step; small pages ride whole (the common serving geometry — page_size
-# 16/32 — is far below the cap), oversized pages split into <=256-token
-# sub-tiles so a step's K/V/score working set stays VMEM-resident instead of
-# scaling with page_size (the read-width analogue of the skinny-M rules:
-# fix the token-tile height, let the page *walk* — not the tile — absorb
-# the width)
-_PAGE_TILE = 256
+# tile heuristics live in kernels/autotune.py now (they are its
+# deterministic fallback table); the aliases keep this module the single
+# import point the dispatch-regime unit tests pin against
+_pick_block = autotune.pick_block
+_pick_bk = autotune.pick_bk
+_matmul_blocks = autotune.matmul_blocks
+_paged_tile = autotune.fallback_paged_tile
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _pick_block(dim: int, target: int) -> int:
-    if dim <= target:
-        return dim
-    b = target
-    while dim % b != 0:
-        b //= 2
-        if b < 8:
-            return dim  # fall back to a single block
-    return b
-
-
-def _pick_bk(k: int, gs: int, vpg: int, target: int) -> int | None:
-    """K block size that divides K, packs whole byte groups (vpg values per
-    `pack_layout` group), and tiles the scale groups (whole groups per
-    block, or whole blocks per group). Returns None when no such block
-    exists — e.g. a group size with a large odd factor — so callers can
-    fall back to the jnp reference instead of spinning this shrink loop
-    down to a mod-by-zero."""
-    bk = _pick_block(k, target)
-    while k % bk != 0 or (gs < bk and bk % gs != 0) or \
-            (gs >= bk and gs % bk != 0) or bk % vpg != 0:
-        bk //= 2  # halving can break K-divisibility; re-checked above
-        if bk < max(vpg, 1):
-            return None
-    return bk
-
-
-def _matmul_blocks(m: int, bm: int, bn: int, bk: int):
-    """Prefill-vs-decode tile regime: skinny token counts trade token-dim
-    padding for wider weight tiles."""
-    if m <= _SKINNY_M:
-        return _SKINNY_M, max(bn, _SKINNY_BN), max(bk, _SKINNY_BK)
-    return bm, bn, bk
-
-
 def _plan_tiles(m: int, k: int, n: int, qt: QuantizedTensor,
-                bm: int, bn: int, bk: int):
-    """Shared dispatch planning for every quantized-matmul wrapper: tile
-    regime by token count, then concrete (bm, bn, bk) blocks. Returns None
-    when K admits no valid block — callers fall back to the jnp ref."""
-    gs = qt.group_size if qt.group_size != -1 else k
-    vpg = pack_layout(qt.bits)[1]
-    bm, bn, bk = _matmul_blocks(m, bm, bn, bk)
-    bk_ = _pick_bk(k, gs, vpg, bk)
-    if bk_ is None:
-        return None
-    return _pick_block(max(m, 8), bm), _pick_block(n, bn), bk_
+                bm: int, bn: int, bk: int, *, kind: str):
+    """Shared dispatch planning for every quantized-matmul wrapper:
+    autotuned plan for the shape class when the config cache is warm, else
+    the deterministic table. Returns None when K admits no valid block —
+    callers fall back to the jnp ref."""
+    return autotune.matmul_plan(kind, m, k, n, bits=qt.bits,
+                                group_size=qt.group_size, bm=bm, bn=bn,
+                                bk=bk)
 
 
 def dequant_matmul(x: jax.Array, qt: QuantizedTensor, *, out_dtype=None,
@@ -145,7 +110,7 @@ def dequant_matmul(x: jax.Array, qt: QuantizedTensor, *, out_dtype=None,
     """x: (M, K) @ packed (K, N) -> (M, N). Pads M to the tile size."""
     out_dtype = out_dtype or x.dtype
     m, k = x.shape
-    plan = _plan_tiles(m, k, qt.n, qt, bm, bn, bk)
+    plan = _plan_tiles(m, k, qt.n, qt, bm, bn, bk, kind="dequant")
     if plan is None:
         y = ref.dequant_matmul_ref(x, qt.qw, qt.scale, bits=qt.bits,
                                    group_size=qt.group_size, k=k)
@@ -172,7 +137,7 @@ def expert_dequant_matmul(x: jax.Array, qt: QuantizedTensor, *,
     size; decode-shaped capacities (C <= 8) take the skinny tiles."""
     out_dtype = out_dtype or x.dtype
     e, c, k = x.shape
-    plan = _plan_tiles(c, k, qt.n, qt, bm, bn, bk)
+    plan = _plan_tiles(c, k, qt.n, qt, bm, bn, bk, kind="expert_dequant")
     if plan is None:
         y = ref.expert_dequant_matmul_ref(x, qt.qw, qt.scale, bits=qt.bits,
                                           group_size=qt.group_size, k=k)
@@ -199,7 +164,7 @@ def w8a8_matmul(x: jax.Array, qt: QuantizedTensor, *, out_dtype=None,
     out_dtype = out_dtype or x.dtype
     m, k = x.shape
     xq, xs = quantize_activation(x, 8, axis_name=amax_axis)  # int8, (M,1) f32
-    plan = _plan_tiles(m, k, qt.n, qt, bm, bn, bk)
+    plan = _plan_tiles(m, k, qt.n, qt, bm, bn, bk, kind="w8a8")
     if plan is None:
         y = ref.w8a8_matmul_ref(xq, qt.qw, qt.scale, bits=qt.bits,
                                 group_size=qt.group_size, k=k)
@@ -216,9 +181,34 @@ def w8a8_matmul(x: jax.Array, qt: QuantizedTensor, *, out_dtype=None,
     return (y * xs).astype(out_dtype)
 
 
-def _paged_tile(page_size: int) -> int:
-    """Token tile per page-walk step (read-width regime, see _PAGE_TILE)."""
-    return _pick_block(page_size, _PAGE_TILE)
+def expert_w8a8_matmul(x: jax.Array, qt: QuantizedTensor, *, out_dtype=None,
+                       bm: int = 128, bn: int = 256, bk: int = 256,
+                       amax_axis: str | None = None) -> jax.Array:
+    """Expert-batched true A8 path: per-token int8 activation quantize over
+    the flattened (E*C) token dim, int8 x int8 -> int32 MXU matmul per
+    expert slab, per-(expert, token) rescale. x: (E, C, K) -> (E, C, N).
+    Replaces the fake-quant + bf16-dequant detour the MoE act_bits=8 path
+    used to take."""
+    out_dtype = out_dtype or x.dtype
+    e, c, k = x.shape
+    xq, xs = quantize_activation(x.reshape(e * c, k), 8, axis_name=amax_axis)
+    xq = xq.reshape(e, c, k)
+    xs = xs.reshape(e, c, 1)
+    plan = _plan_tiles(c, k, qt.n, qt, bm, bn, bk, kind="expert_w8a8")
+    if plan is None:
+        y = ref.expert_w8a8_matmul_ref(xq, qt.qw, qt.scale, bits=qt.bits,
+                                       group_size=qt.group_size, k=k)
+        return (y * xs).astype(out_dtype)
+    bm_, bn_, bk_ = plan
+    pad_c = (-c) % bm_
+    if pad_c:
+        xq = jnp.pad(xq, ((0, 0), (0, pad_c), (0, 0)))
+    y = expert_w8a8_matmul_pallas(xq, qt.qw, qt.scale, bits=qt.bits,
+                                  group_size=qt.group_size, bm=bm_, bn=bn_,
+                                  bk=bk_, interpret=_interpret())
+    if pad_c:
+        y = y[:, :c]
+    return (y * xs).astype(out_dtype)
 
 
 # trace-time pallas -> reference fallbacks, per op name. A kernel that fails
@@ -229,7 +219,12 @@ def _paged_tile(page_size: int) -> int:
 # CI job) disables the net so a broken kernel fails loudly there, never
 # silently passing parity via its own oracle.
 DISPATCH_FALLBACKS: dict[str, int] = {"paged_attention": 0,
-                                      "paged_attention_verify": 0}
+                                      "paged_attention_verify": 0,
+                                      "paged_attention_prefill": 0}
+
+
+def _kv_dtype(k_scale_pool) -> str:
+    return "int8" if k_scale_pool is not None else "bf16"
 
 
 def _kernel_fallback(name: str, kernel_fn, ref_fn):
@@ -263,7 +258,7 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     s, h, hd = q.shape
     kvh = k_pool.shape[2]
     qg = q.reshape(s, kvh, h // kvh, hd)
-    tile = _paged_tile(k_pool.shape[1])
+    tile = autotune.paged_tile(k_pool.shape[1], _kv_dtype(k_scale_pool), 1)
     if _interpret() and dequant_impl() != "pallas":
         o = ref.paged_attention_ref(qg, k_pool, v_pool, block_table, kv_len,
                                     k_scale_pool, v_scale_pool,
@@ -281,42 +276,76 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     return o.reshape(s, h, v_pool.shape[-1]).astype(out_dtype or q.dtype)
 
 
-def paged_attention_verify(q: jax.Array, k_pool: jax.Array,
-                           v_pool: jax.Array, block_table: jax.Array,
-                           kv_len: jax.Array, *, k_scale_pool=None,
-                           v_scale_pool=None, window=None,
-                           out_dtype=None) -> jax.Array:
-    """Fused verify read for self-speculative decoding: q (S, M, H, hd) —
-    the M draft-proposed tail tokens of each slot — against the slot's
-    pages, with per-row causal fill masks (row m attends through position
-    kv_len - M + m). kv_len counts the fill *including* all M tokens.
-    Returns (S, M, H, hd_v). One page walk serves all M rows, so the
-    verify forward streams each live KV tile once instead of M times.
-    M == 1 is exactly the decode read (`paged_attention`)."""
+def _paged_rows_read(name: str, ref_fn, q: jax.Array, k_pool: jax.Array,
+                     v_pool: jax.Array, block_table: jax.Array,
+                     kv_len: jax.Array, *, k_scale_pool=None,
+                     v_scale_pool=None, window=None,
+                     out_dtype=None) -> jax.Array:
+    """Shared multi-row page walk behind the verify and prefill reads:
+    q (S, M, H, hd) — M tail tokens per slot, row m at fill position
+    kv_len - M + m — against the slot's pages, with per-row causal fill
+    masks. kv_len counts the fill *including* all M tokens. Returns
+    (S, M, H, hd_v). One page walk serves all M rows, so each live KV tile
+    streams once instead of M times."""
     s, m, h, hd = q.shape
     kvh = k_pool.shape[2]
     g = h // kvh
     # rows go m-major within each kv head: (S, KVH, M*G, hd)
     qg = q.reshape(s, m, kvh, g, hd).transpose(0, 2, 1, 3, 4)
     qg = qg.reshape(s, kvh, m * g, hd)
-    tile = _paged_tile(k_pool.shape[1])
+    tile = autotune.paged_tile(k_pool.shape[1], _kv_dtype(k_scale_pool), m)
     if _interpret() and dequant_impl() != "pallas":
-        o = ref.paged_attention_ref(qg, k_pool, v_pool, block_table, kv_len,
-                                    k_scale_pool, v_scale_pool,
-                                    window=window, tile=tile, m_rows=m)
+        o = ref_fn(qg, k_pool, v_pool, block_table, kv_len,
+                   k_scale_pool, v_scale_pool, window=window, tile=tile,
+                   m_rows=m)
     else:
         o = _kernel_fallback(
-            "paged_attention_verify",
+            name,
             lambda: paged_attention_pallas(
                 qg, k_pool, v_pool, block_table, kv_len, k_scale_pool,
                 v_scale_pool, window=window, tile=tile, m_rows=m,
                 interpret=_interpret()),
-            lambda: ref.paged_attention_ref(
+            lambda: ref_fn(
                 qg, k_pool, v_pool, block_table, kv_len, k_scale_pool,
                 v_scale_pool, window=window, tile=tile, m_rows=m))
     hd_v = v_pool.shape[-1]
     o = o.reshape(s, kvh, m, g, hd_v).transpose(0, 2, 1, 3, 4)
     return o.reshape(s, m, h, hd_v).astype(out_dtype or q.dtype)
+
+
+def paged_attention_verify(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_table: jax.Array,
+                           kv_len: jax.Array, *, k_scale_pool=None,
+                           v_scale_pool=None, window=None,
+                           out_dtype=None) -> jax.Array:
+    """Fused verify read for self-speculative decoding: the M rows are the
+    draft-proposed tail tokens of each slot (see `_paged_rows_read`).
+    M == 1 is exactly the decode read (`paged_attention`)."""
+    return _paged_rows_read(
+        "paged_attention_verify", ref.paged_attention_ref, q, k_pool, v_pool,
+        block_table, kv_len, k_scale_pool=k_scale_pool,
+        v_scale_pool=v_scale_pool, window=window, out_dtype=out_dtype)
+
+
+def paged_attention_prefill(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, block_table: jax.Array,
+                            kv_len: jax.Array, *, k_scale_pool=None,
+                            v_scale_pool=None, window=None,
+                            out_dtype=None) -> jax.Array:
+    """Fused chunked/suffix-prefill read: the M rows are a slot's
+    left-padded prefill chunk (row j holds the token at fill position
+    kv_len - M + j whatever the row's real chunk length — left-padding
+    makes ragged chunks line up on the same per-row fill limits the verify
+    read uses; pad rows carry positions < 0, land on the scratch page, and
+    read back as values the engine discards). Replaces the
+    gather-the-context oracle on the prefill hot path: earlier context —
+    the slot's own prior chunks or shared prefix pages — streams through
+    the same page walk as decode instead of materializing a contiguous
+    (S, width*page_size, ...) HBM view."""
+    return _paged_rows_read(
+        "paged_attention_prefill", ref.paged_attention_prefill_ref, q,
+        k_pool, v_pool, block_table, kv_len, k_scale_pool=k_scale_pool,
+        v_scale_pool=v_scale_pool, window=window, out_dtype=out_dtype)
 
 
 def channel_stats(x: jax.Array):

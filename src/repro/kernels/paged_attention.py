@@ -1,9 +1,8 @@
-"""Pallas TPU kernel: fused paged-attention decode with inline int8-KV dequant.
+"""Pallas TPU kernel: fused paged attention with inline int8-KV dequant.
 
-The serving decode hot path (vLLM/PagedAttention-style): one query token per
-slot attends over that slot's paged KV cache. Instead of gathering every
-slot's pages into a contiguous ``(S, maxp*page_size, ...)`` HBM view and
-running a dense einsum (the PR-1 path, which reads — and for int8 KV
+The serving read hot path (vLLM/PagedAttention-style). Instead of gathering
+every slot's pages into a contiguous ``(S, maxp*page_size, ...)`` HBM view
+and running a dense einsum (the PR-1 path, which reads — and for int8 KV
 materializes in bf16 — the *provisioned* window regardless of fill), the
 kernel walks the block table directly: per (slot, kv-head) grid cell it
 streams one page tile per grid step HBM->VMEM, dequantizes int8 K/V inline
@@ -11,22 +10,29 @@ from the scale pools (which ride the same block table), and folds the tile
 into an online-softmax accumulator held in VMEM scratch. Pages beyond a
 slot's fill count — and, under sliding-window attention, pages wholly
 behind the window — are never touched: their grid steps are routed to the
-scratch page by the index map and skipped by ``pl.when``, so decode HBM
-traffic scales with *live* tokens, not ``maxp*page_size`` padding.
+scratch page by the index map and skipped by ``pl.when``, so HBM traffic
+scales with *live* tokens, not ``maxp*page_size`` padding.
 
-Grid: ``(S, KVH, W * tiles_per_page)``, the page-walk axis innermost so the
-(m, l, acc) scratch accumulators carry across one cell's pages. The block
-table and fill counts are scalar-prefetched (``PrefetchScalarGridSpec``) so
-index maps can chase page indices before each tile's DMA is issued.
+Template instance: the page-walk body, liveness predicate, index maps and
+``PrefetchScalarGridSpec`` all come from `kernels/template.py`
+(:class:`PagedSpec`); only the ``pl.pallas_call`` site lives here. The
+grid is ``(S, KVH, W * tiles_per_page)``, the page-walk axis innermost so
+the (m, l, acc) scratch accumulators carry across one cell's pages.
 
-Verify regime (``m_rows > 1``): self-speculative decoding verifies the
-draft's last ``m_rows`` tokens of a slot in one read. The query block grows
-to ``m_rows * G`` rows, laid out m-major (row r belongs to verify token
-``r // G``, which sits at fill position ``kv_len - m_rows + r // G``), and
-the causal/window masks become per-row fill limits. One page walk serves
-all ``m_rows`` tokens, so a verify step streams each live KV tile once
-instead of ``m_rows`` times. ``m_rows == 1`` reduces exactly to the decode
-read — same masks, same accumulator updates, bit-identical output.
+Multi-row regime (``m_rows > 1``) serves two callers through one body:
+  * spec-decode *verify* — the draft's last ``m_rows`` tokens of a slot
+    verified in one read;
+  * chunked/suffix *prefill* — a slot's left-padded prefill chunk read
+    against its own earlier pages plus any shared prefix pages, replacing
+    the gather-oracle prefill path (row j of the padded chunk sits at fill
+    position ``kv_len - m_rows + j`` exactly like a verify row, so ragged
+    chunk lengths inside one padded bucket need no extra masking — pad
+    rows carry positions < 0, write to the scratch page, and read as
+    garbage the engine discards).
+The query block is ``m_rows * G`` rows, laid out m-major, and the
+causal/window masks become per-row fill limits. ``m_rows == 1`` reduces
+exactly to the decode read — same masks, same accumulator updates,
+bit-identical output.
 
 Numerics mirror ``kernels/ref.paged_attention_ref`` op-for-op (same walk
 order, same f32 accumulation) so interpret-mode runs are bit-comparable
@@ -46,127 +52,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-NEG = -1e30
+from repro.kernels.template import (NEG, PagedSpec, make_paged_kernel,
+                                    paged_grid_spec)
 
-
-def _tile_coords(t: jax.Array, *, page_size: int, tile: int):
-    """Grid step t on the page-walk axis -> (page slot w, sub-tile, base pos)."""
-    nt = page_size // tile
-    w = t // nt
-    sub = t % nt
-    base = w * page_size + sub * tile
-    return w, sub, base
-
-
-def _tile_live(s, t, bt, kl, *, page_size: int, tile: int,
-               window: Optional[int], m_rows: int = 1):
-    """Does grid step t hold any live (unmasked) token for slot s?
-
-    Dead tiles are skipped entirely: beyond the fill count, on an unheld
-    block-table entry (-1), or — with sliding-window attention — wholly
-    behind the window. This predicate is shared by the index maps (route
-    the DMA to the scratch page) and the kernel body (skip the compute).
-
-    With ``m_rows`` verify rows the earliest row's window starts at
-    ``kl - (m_rows - 1) - window``, so the SWA liveness bound loosens by
-    exactly ``m_rows - 1`` tokens (rows that reach further back than a
-    given tile mask it per-row inside the kernel).
-    """
-    w, _, base = _tile_coords(t, page_size=page_size, tile=tile)
-    live = (base < kl[s]) & (bt[s, w] >= 0)
-    if window is not None:
-        live &= (base + tile) > (kl[s] - (m_rows - 1) - window)
-    return live
-
-
-def _page_map(s, h, t, bt, kl, *, page_size: int, tile: int,
-              window: Optional[int], m_rows: int = 1):
-    """Block index of the K/V page tile for grid cell (s, h, t)."""
-    w, sub, _ = _tile_coords(t, page_size=page_size, tile=tile)
-    live = _tile_live(s, t, bt, kl, page_size=page_size, tile=tile,
-                      window=window, m_rows=m_rows)
-    page = jnp.where(live, jnp.maximum(bt[s, w], 0), 0)
-    return page, sub, h, 0
-
-
-def _scale_map(s, h, t, bt, kl, *, page_size: int, tile: int,
-               window: Optional[int], m_rows: int = 1):
-    w, sub, _ = _tile_coords(t, page_size=page_size, tile=tile)
-    live = _tile_live(s, t, bt, kl, page_size=page_size, tile=tile,
-                      window=window, m_rows=m_rows)
-    page = jnp.where(live, jnp.maximum(bt[s, w], 0), 0)
-    return page, sub, h
-
-
-def _paged_attn_kernel(bt_ref, kl_ref, q_ref, k_ref, v_ref, *rest,
-                       page_size: int, tile: int, window: Optional[int],
-                       m_rows: int, quant: bool, sm_scale: float,
-                       n_steps: int):
-    if quant:
-        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
-    else:
-        o_ref, m_scr, l_scr, acc_scr = rest
-    s_i = pl.program_id(0)
-    t_i = pl.program_id(2)
-    kl = kl_ref[s_i]
-    _, _, base = _tile_coords(t_i, page_size=page_size, tile=tile)
-    live = _tile_live(s_i, t_i, bt_ref, kl_ref, page_size=page_size,
-                      tile=tile, window=window, m_rows=m_rows)
-
-    @pl.when(t_i == 0)
-    def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
-
-    @pl.when(live)
-    def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)                  # (R, hd)
-        k = k_ref[0, :, 0, :]                                # (tile, hd)
-        v = v_ref[0, :, 0, :]                                # (tile, hd_v)
-        if quant:
-            kf = k.astype(jnp.float32) * ks_ref[0, :, 0][:, None]
-            vf = v.astype(jnp.float32) * vs_ref[0, :, 0][:, None]
-        else:
-            kf = k.astype(jnp.float32)
-            vf = v.astype(jnp.float32)
-        s = jax.lax.dot_general(q, kf, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-        s = s * sm_scale                                     # (R, tile)
-        pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
-        rows = q.shape[0]                                    # R = m_rows * G
-        g = rows // m_rows
-        # row r verifies the token at fill position kl - m_rows + r//g, so
-        # its causal limit is kl - (m_rows - 1 - r//g); at m_rows == 1 this
-        # is the scalar kl of the decode read
-        r = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
-        lim = kl - (m_rows - 1 - r // g)
-        valid = pos < lim
-        if window is not None:
-            valid &= pos > (lim - 1 - window)
-        s = jnp.where(valid, s, NEG)
-        m_prev = m_scr[...]                                  # (R, 1)
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-        corr = jnp.exp(m_prev - m_new)
-        p = jnp.exp(s - m_new)                               # (R, tile)
-        # a live tile can sit wholly outside an *early* row's reach
-        # (m_rows > 1); that row's m_new is still NEG there, making
-        # exp(NEG - NEG) garbage — zero masked columns explicitly. At
-        # m_rows == 1 every live tile has a valid column, m_new > NEG, and
-        # masked columns underflow to exactly 0.0 anyway: bit-identical.
-        p = jnp.where(valid, p, 0.0)
-        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
-        acc_scr[...] = acc_scr[...] * corr + jnp.dot(
-            p, vf, preferred_element_type=jnp.float32)
-        m_scr[...] = m_new
-
-    @pl.when(t_i == n_steps - 1)
-    def _finalize():
-        # empty slots (kv_len == 0) never accumulate: l stays 0 and the
-        # guarded divide emits exact zeros (the engine discards them)
-        o_ref[0, 0] = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+__all__ = ["paged_attention_pallas", "NEG"]
 
 
 @functools.partial(jax.jit, static_argnames=("window", "tile", "m_rows",
@@ -180,7 +70,7 @@ def paged_attention_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                            interpret: bool = False) -> jax.Array:
     """q: (S, KVH, m_rows*G, hd) m-major rows; pools: (P, page, KVH,
     hd[/hd_v]); block_table: (S, W) page ids (-1 = unheld); kv_len: (S,)
-    fill counts *including* all m_rows verify tokens (row m sits at
+    fill counts *including* all m_rows query tokens (row m sits at
     position kv_len - m_rows + m; at m_rows == 1 q is the current token at
     kv_len - 1). Scale pools (P, page, KVH) mark int8 pools. Returns
     (S, KVH, m_rows*G, hd_v) f32."""
@@ -190,45 +80,20 @@ def paged_attention_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     hd_v = v_pool.shape[-1]
     w = block_table.shape[1]
     tile = tile or page_size
-    assert page_size % tile == 0, (page_size, tile)
     quant = k_scale_pool is not None
     n_steps = w * (page_size // tile)
     sm_scale = 1.0 / (hd ** 0.5)
-    geom = dict(page_size=page_size, tile=tile, window=window,
-                m_rows=m_rows)
+    spec = PagedSpec(page_size=page_size, tile=tile, window=window,
+                     m_rows=m_rows, quant=quant)
 
-    in_specs = [
-        pl.BlockSpec((1, 1, rows, hd),
-                     lambda s_, h_, t_, bt, kl: (s_, h_, 0, 0)),
-        pl.BlockSpec((1, tile, 1, hd), functools.partial(_page_map, **geom)),
-        pl.BlockSpec((1, tile, 1, hd_v), functools.partial(_page_map, **geom)),
-    ]
     args = [q, k_pool, v_pool]
     if quant:
-        in_specs += [
-            pl.BlockSpec((1, tile, 1), functools.partial(_scale_map, **geom)),
-            pl.BlockSpec((1, tile, 1), functools.partial(_scale_map, **geom)),
-        ]
         args += [k_scale_pool.astype(jnp.float32),
                  v_scale_pool.astype(jnp.float32)]
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(s, kvh, n_steps),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, rows, hd_v),
-                               lambda s_, h_, t_, bt, kl: (s_, h_, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((rows, 1), jnp.float32),      # running max
-            pltpu.VMEM((rows, 1), jnp.float32),      # running denominator
-            pltpu.VMEM((rows, hd_v), jnp.float32),   # output accumulator
-        ],
-    )
-    kernel = functools.partial(_paged_attn_kernel, quant=quant,
-                               sm_scale=sm_scale, n_steps=n_steps, **geom)
     return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
+        make_paged_kernel(spec, sm_scale=sm_scale, n_steps=n_steps),
+        grid_spec=paged_grid_spec(spec, s=s, kvh=kvh, rows=rows, hd=hd,
+                                  hd_v=hd_v, n_steps=n_steps),
         out_shape=jax.ShapeDtypeStruct((s, kvh, rows, hd_v), jnp.float32),
         interpret=interpret,
     )(block_table.astype(jnp.int32), kv_len.astype(jnp.int32), *args)

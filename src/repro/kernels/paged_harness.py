@@ -60,6 +60,43 @@ def build_verify_case(seed: int, s: int, m: int, w: int, ps: int, kvh: int,
     return q, pools, bt, kv_len
 
 
+def build_prefill_case(seed: int, s: int, m: int, w: int, ps: int, kvh: int,
+                       g: int, hd: int, fills, kv_bits: int):
+    """Chunked-prefill variant of `build_verify_case`: q is a left-padded
+    prefill chunk bucket of M rows per slot (row j sits at fill position
+    fills[si] - m + j, like a verify row). Unlike verify, fills may be
+    *smaller* than M — a short prompt padded into the bucket leaves rows
+    with fill limit <= 0, which the kernel defines as exact zeros.
+    Returns (q (S, M, H, hd), pools, block_table, kv_len)."""
+    _, pools, bt, kv_len = build_paged_case(seed, s, w, ps, kvh, g, hd,
+                                            fills, kv_bits)
+    rng = np.random.default_rng(seed + 2)
+    q = jnp.asarray(rng.normal(size=(s, m, kvh * g, hd)), jnp.float32)
+    return q, pools, bt, kv_len
+
+
+def prefill_oracle(q: jax.Array, pools: dict, bt: jax.Array,
+                   kv_len: jax.Array, window: Optional[int],
+                   chunk) -> jax.Array:
+    """Gather-based oracle for the fused chunked-prefill read: the
+    PR-3 chunked path's math — gather the whole context contiguous,
+    dequant, dense attention with per-row positions kv_len - M + j. Rows
+    outside the chunk (j < M - chunk[si]) and empty slots are garbage
+    (all-masked softmax); the kernel defines those as exact zeros —
+    compare live chunk rows of live slots only (see `prefill_live_rows`)."""
+    del chunk  # masking happens at comparison time; positions are per-row
+    return verify_oracle(q, pools, bt, kv_len, window)
+
+
+def prefill_live_rows(kv_len, chunk, m: int) -> np.ndarray:
+    """(S, M) bool: rows the engine actually consumes — slot live and row
+    inside the slot's left-padded chunk."""
+    kv = np.asarray(kv_len)
+    ch = np.asarray(chunk)
+    j = np.arange(m)[None, :]
+    return (kv[:, None] > 0) & (j >= m - ch[:, None])
+
+
 def verify_oracle(q: jax.Array, pools: dict, bt: jax.Array,
                   kv_len: jax.Array, window: Optional[int]) -> jax.Array:
     """Gather-based oracle for the verify read: dense attention with the

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.quant.types import pack_layout, qmax_for_bits
-from repro.kernels.dequant_matmul import _scale_blockspec, packed_tile_rows
+from repro.kernels.template import packed_tile_rows, scale_blockspec
 
 
 def _quantize_kernel(w_ref, scale_ref, o_ref, *, bits: int, bk: int):
@@ -55,7 +55,7 @@ def quantize_pack_pallas(w: jax.Array, scale: jax.Array, *, bits: int,
     assert k % bk == 0 and n % bn == 0 and bk % vpg == 0
 
     # reuse the dequant scale indexing, adding a dummy leading grid dim
-    sspec = _scale_blockspec(group_size, k, g, bk, bn)
+    sspec = scale_blockspec(group_size, k, g, bk, bn)
     sspec2 = pl.BlockSpec(sspec.block_shape,
                           lambda kk, j: sspec.index_map(0, j, kk))
 

@@ -48,6 +48,15 @@ def w8a8_matmul_ref(xq: jax.Array, qw: jax.Array, scale: jax.Array, *,
                    scale.astype(jnp.float32)[None], axis=1)
 
 
+def expert_w8a8_matmul_ref(xq: jax.Array, qw: jax.Array, scale: jax.Array, *,
+                           bits: int, group_size: int, k: int) -> jax.Array:
+    """Expert-stacked W8A8 oracle: xq (E, C, K) int8 @ packed (E, pk, N)
+    with scale (E, G, N). Returns (E, C, N) f32 (pre activation-rescale),
+    one `w8a8_matmul_ref` per expert."""
+    return jax.vmap(lambda x2, w2, s2: w8a8_matmul_ref(
+        x2, w2, s2, bits=bits, group_size=group_size, k=k))(xq, qw, scale)
+
+
 def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                         block_table: jax.Array, kv_len: jax.Array,
                         k_scale_pool: Optional[jax.Array] = None,
@@ -140,6 +149,24 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     per_slot = jax.vmap(cell, in_axes=(0, None, None, 0))    # over kv-heads
     return jax.vmap(per_slot, in_axes=(0, 0, 0, None))(
         q, block_table.astype(jnp.int32), kv_len.astype(jnp.int32), heads)
+
+
+def paged_attention_prefill_ref(q: jax.Array, k_pool: jax.Array,
+                                v_pool: jax.Array, block_table: jax.Array,
+                                kv_len: jax.Array,
+                                k_scale_pool: Optional[jax.Array] = None,
+                                v_scale_pool: Optional[jax.Array] = None, *,
+                                window: Optional[int] = None,
+                                tile: int = 0, m_rows: int = 1) -> jax.Array:
+    """Named oracle for the fused chunked/suffix-prefill read. The walk is
+    identical to the verify regime of :func:`paged_attention_ref` — a
+    prefill chunk's left-padded row j sits at fill position
+    ``kv_len - m_rows + j`` exactly like a verify row — so this simply
+    delegates; the separate name keeps the KERNEL_CONTRACTS mapping and
+    fallback counters per dispatch site."""
+    return paged_attention_ref(q, k_pool, v_pool, block_table, kv_len,
+                               k_scale_pool, v_scale_pool, window=window,
+                               tile=tile, m_rows=m_rows)
 
 
 def channel_stats_ref(x: jax.Array):

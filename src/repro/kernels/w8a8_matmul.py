@@ -13,7 +13,9 @@ Works for any packed bits in {2, 3, 4, 8}: the unpacked values always fit
 int8 (|q| <= 127), so W4A8 — the regime FPTQ shows is the practical
 sweet spot — uses the exact same kernel as W8A8.
 
-Grid: (M/bm, N/bn, K/bk), K innermost, accumulating across K steps.
+Template instance: MatmulSpec(epilogue="int8_mxu") from
+`kernels/template.py`. Grid: (M/bm, N/bn, K/bk), K innermost,
+accumulating across K steps.
 """
 from __future__ import annotations
 
@@ -23,32 +25,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.dequant_matmul import (_scale_blockspec, packed_tile_rows,
-                                          unpack_tile)
+from repro.kernels.template import (MatmulSpec, matmul_grid, matmul_in_specs,
+                                    matmul_out_spec, make_matmul_kernel)
 
-
-def _w8a8_matmul_kernel(x_ref, qw_ref, scale_ref, o_ref, *, bits: int,
-                        bk: int):
-    k_step = pl.program_id(2)
-
-    @pl.when(k_step == 0)
-    def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
-
-    # unpacked values always fit int8 (|q| <= 127), so the MXU dots below
-    # run int8 x int8 -> int32 for any packed bits
-    w8 = unpack_tile(qw_ref[...], bits, bk).astype(jnp.int8)   # (bk, bn)
-    x8 = x_ref[...]                                    # (bm, bk) int8
-    s = scale_ref[...]                                 # (gb, bn) f32
-    gb = s.shape[0]
-    gsb = bk // gb
-    acc = o_ref[...]
-    for gi in range(gb):
-        d = jnp.dot(x8[:, gi * gsb:(gi + 1) * gsb],
-                    w8[gi * gsb:(gi + 1) * gsb],
-                    preferred_element_type=jnp.int32)
-        acc = acc + d.astype(jnp.float32) * s[gi][None, :]
-    o_ref[...] = acc
+_SPEC = MatmulSpec("w8a8_matmul", epilogue="int8_mxu")
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "group_size", "bm", "bn",
@@ -66,23 +46,18 @@ def w8a8_matmul_pallas(xq: jax.Array, qw: jax.Array, scale: jax.Array, *,
     bk = min(bk, k)
     bn = min(bn, n)
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
-    pk = packed_tile_rows(bk, bits)
     # every K-block must hold whole scale groups: the int32 accumulator is
     # rescaled group-by-group inside the block
     gs = group_size if group_size != -1 else k
     assert (gs >= bk and gs % bk == 0) or (gs < bk and bk % gs == 0)
 
-    grid = (m // bm, n // bn, k // bk)
-    kernel = functools.partial(_w8a8_matmul_kernel, bits=bits, bk=bk)
+    dims = dict(k=k, g=g, bm=bm, bn=bn, bk=bk)
     return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((pk, bn), lambda i, j, kk: (kk, j)),
-            _scale_blockspec(group_size, k, g, bk, bn),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        make_matmul_kernel(_SPEC, bits=bits, bk=bk),
+        grid=matmul_grid(_SPEC, e=1, m=m, n=n, k=k, bm=bm, bn=bn, bk=bk),
+        in_specs=matmul_in_specs(_SPEC, bits=bits, group_size=group_size,
+                                 **dims),
+        out_specs=matmul_out_spec(_SPEC, bm=bm, bn=bn),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
     )(xq, qw, scale.astype(jnp.float32))

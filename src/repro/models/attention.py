@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import TP_AXIS, lc
-from repro.kernels.ops import paged_attention, paged_attention_verify
+from repro.kernels.ops import (paged_attention, paged_attention_prefill,
+                               paged_attention_verify)
 from repro.models.config import ModelConfig
 from repro.models.linear import dense, init_dense
 from repro.models.rope import apply_rope
@@ -424,6 +425,25 @@ def apply_attention(cfg: ModelConfig, p: dict, x: jax.Array, *,
             new_cache = _paged_write_prefill(cache, k, v, kpos,
                                              paged["bt_rows"])
             fused_o = paged_attention_verify(
+                q, new_cache["k_pool"], new_cache["v_pool"],
+                paged["bt_rows"], paged["kv_len"],
+                k_scale_pool=new_cache.get("k_scale_pool"),
+                v_scale_pool=new_cache.get("v_scale_pool"),
+                window=window, out_dtype=q.dtype)
+        elif (cache is not None and "k_pool" in cache
+                and paged is not None and "bt_rows" in paged
+                and "kv_len" in paged and causal
+                and cfg.paged_attn_impl == "fused"):
+            # fused chunked/suffix prefill: scatter the left-padded chunk
+            # with the prefill scatter (pad rows carry positions < 0 and
+            # route to the scratch page), then read all s rows in one
+            # fused page walk — row j sits at fill position kv_len - s + j
+            # exactly like a verify row, so earlier context (prior chunks,
+            # shared prefix pages) streams through the page walk instead
+            # of being gathered into a contiguous HBM view
+            new_cache = _paged_write_prefill(cache, k, v, kpos,
+                                             paged["bt_rows"])
+            fused_o = paged_attention_prefill(
                 q, new_cache["k_pool"], new_cache["v_pool"],
                 paged["bt_rows"], paged["kv_len"],
                 k_scale_pool=new_cache.get("k_scale_pool"),

@@ -11,6 +11,8 @@ paths" for the full table):
     - (E, K, N) stacked experts      -> kernels/expert_dequant_matmul
       (packed expert slabs consumed directly; no float stack)
     - act_bits == 8                  -> kernels/w8a8_matmul (true int8 MXU)
+    - act_bits == 8, stacked experts -> kernels/expert_w8a8_matmul
+      (int8 x int8 MXU dots per expert slab)
   * QuantizedTensor, CPU           -> reference dequant + einsum / the
     int32 W8A8 reference (same math)
 
@@ -122,6 +124,26 @@ def dense_experts(p: dict, x: jax.Array, *, dtype=None) -> jax.Array:
     w = p["w"]
     dtype = dtype or x.dtype
     if isinstance(w, QuantizedTensor):
+        if (w.act_bits == 8 and w.qw.ndim == 3
+                and w.bits in _KERNEL_BITS):
+            # true W4A8/W8A8 expert path: per-token int8 activations feed
+            # the int8 x int8 -> int32 MXU dots (no bf16 dequant stack)
+            if _use_pallas():
+                from repro.kernels import ops as kops
+
+                y = kops.expert_w8a8_matmul(x, w, out_dtype=dtype)
+            else:
+                from repro.kernels import ref as kref
+
+                e, c, k = x.shape
+                xq, xs = quantize_activation(x.reshape(e * c, k), 8)
+                y = (kref.expert_w8a8_matmul_ref(
+                    xq.reshape(e, c, k), w.qw, w.scale, bits=w.bits,
+                    group_size=w.group_size,
+                    k=w.k) * xs.reshape(e, c, 1)).astype(dtype)
+            if "b" in p and p["b"] is not None:
+                y = y + p["b"][:, None, :].astype(dtype)
+            return y
         if w.act_bits:
             x = fake_quant_activation(x, w.act_bits)
         if _use_pallas() and w.qw.ndim == 3 and w.bits in _KERNEL_BITS:

@@ -1,0 +1,210 @@
+"""Unit tests for kernels/autotune.py: the deterministic fallback table,
+shape-class bucketing, JSON cache hygiene (version hash, corrupt files,
+invalid entries), and the measured REPRO_AUTOTUNE=1 search."""
+import json
+
+import pytest
+
+from repro.kernels import autotune, template
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache_state():
+    """Each test starts and ends with a cold in-memory cache."""
+    autotune.reset()
+    yield
+    autotune.reset()
+
+
+# ------------------------------------------------ deterministic fallback
+
+def test_cold_cache_resolution_is_the_fallback_table(monkeypatch):
+    """Default mode with no cache file resolves every shape class from the
+    deterministic table — and does so identically on repeat calls (the
+    replay-twice / sanitizer contract)."""
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    monkeypatch.delenv("REPRO_AUTOTUNE_CACHE", raising=False)
+    shapes = [(1, 128, 256, 4, 32), (64, 256, 512, 2, -1),
+              (9, 128, 128, 8, 64)]
+    for kind in ("dequant", "expert_dequant", "w8a8", "expert_w8a8"):
+        for m, k, n, bits, gs in shapes:
+            want = autotune.fallback_matmul_plan(
+                m, k, n, bits=bits, group_size=gs, bm=128, bn=256, bk=256)
+            got = autotune.matmul_plan(kind, m, k, n, bits=bits,
+                                       group_size=gs)
+            assert got == want
+            assert autotune.matmul_plan(kind, m, k, n, bits=bits,
+                                        group_size=gs) == got
+    assert autotune.paged_tile(16, "bf16", 1) == 16
+    assert autotune.paged_tile(512, "int8", 4) == 256
+
+
+def test_mode_zero_ignores_a_warm_cache(tmp_path, monkeypatch):
+    """REPRO_AUTOTUNE=0 pins the table even when a valid warm cache entry
+    exists (CI / deterministic replay)."""
+    path = str(tmp_path / "tune.json")
+    key = autotune.matmul_key("dequant", 4, 128, 256, 4, 32)
+    autotune.save_cache(path, {key: {"bm": 8, "bn": 128, "bk": 64}})
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    want = autotune.fallback_matmul_plan(4, 128, 256, bits=4, group_size=32,
+                                         bm=128, bn=256, bk=256)
+    assert autotune.matmul_plan("dequant", 4, 128, 256, bits=4,
+                                group_size=32) == want
+
+
+def test_pick_bk_per_channel_fast_path():
+    """group_size == K (per-channel) takes the direct largest-divisor path:
+    the halving loop could only ever return K itself (regression: W4 g=-1
+    at K=1012 ran one whole-K block instead of 11 x 92-row blocks)."""
+    assert autotune.pick_bk(1012, 1012, 4, 256) == 92
+    assert autotune.pick_bk(128, 128, 4, 256) == 128
+    assert autotune.pick_bk(24, 24, 8, 256) == 24
+    # K not a multiple of the byte group can never pack
+    assert autotune.pick_bk(1012, 1012, 8, 256) is None
+    # no >= 8-row divisor under the target: one whole-K block
+    assert autotune.pick_bk(1012, 1012, 4, 8) == 1012
+
+
+# ------------------------------------------------------- shape-class keys
+
+def test_m_bucket_collapses_decode_and_pow2():
+    assert [autotune.m_bucket(m) for m in (1, 3, 8)] == [8, 8, 8]
+    assert autotune.m_bucket(9) == 16
+    assert autotune.m_bucket(16) == 16
+    assert autotune.m_bucket(17) == 32
+
+
+def test_shape_class_keys():
+    k1 = autotune.matmul_key("dequant", 1, 256, 512, 4, 32)
+    k8 = autotune.matmul_key("dequant", 8, 256, 512, 4, 32)
+    k9 = autotune.matmul_key("dequant", 9, 256, 512, 4, 32)
+    assert k1 == k8 and k8 != k9                       # decode class
+    assert autotune.matmul_key("w8a8", 1, 256, 512, 4, 32) != k1
+    assert (autotune.paged_key(16, "bf16", 1)
+            != autotune.paged_key(16, "int8", 1))
+    assert (autotune.paged_key(16, "bf16", 1)
+            == autotune.paged_key(16, "bf16", 8))      # m-rows bucket
+
+
+# ------------------------------------------------------------ cache files
+
+def test_cache_round_trip(tmp_path, monkeypatch):
+    path = str(tmp_path / "tune.json")
+    key = autotune.matmul_key("dequant", 4, 128, 256, 4, 32)
+    autotune.save_cache(path, {key: {"bm": 8, "bn": 128, "bk": 64}})
+    assert autotune.load_cache(path) == {key: {"bm": 8, "bn": 128, "bk": 64}}
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    assert autotune.matmul_plan("dequant", 4, 128, 256, bits=4,
+                                group_size=32) == (8, 128, 64)
+    # shape classes not in the cache still resolve from the table
+    want = autotune.fallback_matmul_plan(4, 128, 256, bits=4, group_size=64,
+                                         bm=128, bn=256, bk=256)
+    assert autotune.matmul_plan("dequant", 4, 128, 256, bits=4,
+                                group_size=64) == want
+
+
+def test_missing_cache_file_is_cold(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "absent.json"))
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    want = autotune.fallback_matmul_plan(1, 128, 256, bits=4, group_size=32,
+                                         bm=128, bn=256, bk=256)
+    assert autotune.matmul_plan("dequant", 1, 128, 256, bits=4,
+                                group_size=32) == want
+
+
+def test_stale_template_version_is_ignored(tmp_path, caplog):
+    path = str(tmp_path / "tune.json")
+    key = autotune.matmul_key("dequant", 4, 128, 256, 4, 32)
+    payload = {"version": "0" * 16,
+               "entries": {key: {"bm": 8, "bn": 128, "bk": 64}}}
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(payload, f)
+    with caplog.at_level("WARNING"):
+        assert autotune.load_cache(path) == {}
+    assert "template" in caplog.text
+
+
+@pytest.mark.parametrize("content", ["{not json", '["a", "list"]',
+                                     '{"version": "x"}'])
+def test_corrupt_cache_falls_back(tmp_path, caplog, content, monkeypatch):
+    """Corrupt / wrong-shape cache files warn and hand over to the table —
+    never an exception on the serving path."""
+    path = str(tmp_path / "tune.json")
+    with open(path, "w", encoding="utf-8") as f:
+        f.write(content)
+    with caplog.at_level("WARNING"):
+        assert autotune.load_cache(path) == {}
+    assert "unreadable" in caplog.text or "template" in caplog.text
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    want = autotune.fallback_matmul_plan(4, 128, 256, bits=4, group_size=32,
+                                         bm=128, bn=256, bk=256)
+    assert autotune.matmul_plan("dequant", 4, 128, 256, bits=4,
+                                group_size=32) == want
+
+
+def test_invalid_cached_entry_is_revalidated_away(tmp_path, monkeypatch,
+                                                  caplog):
+    """A hand-edited or stale entry that violates the tiling constraints
+    can never reach pallas_call: it is dropped with a warning."""
+    path = str(tmp_path / "tune.json")
+    mk = autotune.matmul_key("dequant", 4, 128, 256, 4, 32)
+    pk = autotune.paged_key(16, "bf16", 1)
+    autotune.save_cache(path, {mk: {"bm": 8, "bn": 100, "bk": 64},
+                               pk: {"tile": 13}})
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    want = autotune.fallback_matmul_plan(4, 128, 256, bits=4, group_size=32,
+                                         bm=128, bn=256, bk=256)
+    with caplog.at_level("WARNING"):
+        assert autotune.matmul_plan("dequant", 4, 128, 256, bits=4,
+                                    group_size=32) == want
+        assert autotune.paged_tile(16, "bf16", 1) == 16
+    assert "violates" in caplog.text
+
+
+# ------------------------------------------------------- measured search
+
+def test_measured_mode_persists_and_reuses(tmp_path, monkeypatch):
+    """REPRO_AUTOTUNE=1 measures real pallas_call candidates, persists the
+    winner under the current template version, and the default mode then
+    serves it warm."""
+    path = str(tmp_path / "tune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    plan = autotune.matmul_plan("dequant", 4, 128, 128, bits=4,
+                                group_size=32)
+    assert plan is not None
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    assert data["version"] == template.TEMPLATE_VERSION
+    key = autotune.matmul_key("dequant", 4, 128, 128, 4, 32)
+    assert data["entries"][key] == {"bm": plan[0], "bn": plan[1],
+                                    "bk": plan[2]}
+    monkeypatch.setenv("REPRO_AUTOTUNE", "")
+    autotune.reset()
+    assert autotune.matmul_plan("dequant", 4, 128, 128, bits=4,
+                                group_size=32) == plan
+
+
+def test_measured_mode_untileable_shape_returns_none(monkeypatch):
+    """No candidate lowers (K=18, gs=2): the search degrades to the
+    fallback, which is None — callers take the jnp reference."""
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    monkeypatch.delenv("REPRO_AUTOTUNE_CACHE", raising=False)
+    assert autotune.matmul_plan("dequant", 4, 18, 16, bits=2,
+                                group_size=2) is None
+
+
+def test_measured_paged_tile(tmp_path, monkeypatch):
+    path = str(tmp_path / "tune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    tile = autotune.paged_tile(128, "bf16", 1)
+    assert tile in (64, 128)
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    assert data["entries"][autotune.paged_key(128, "bf16", 1)] == \
+        {"tile": tile}

@@ -21,8 +21,10 @@ from repro.core.quant.types import (compute_scales, dequantize, pack_layout,
                                     quantize_stacked)
 from repro.kernels import ops, ref
 from repro.kernels.paged_attention import paged_attention_pallas
-from repro.kernels.paged_harness import (build_paged_case, build_verify_case,
-                                         gather_oracle, verify_oracle)
+from repro.kernels.paged_harness import (build_paged_case, build_prefill_case,
+                                         build_verify_case, gather_oracle,
+                                         prefill_live_rows, prefill_oracle,
+                                         verify_oracle)
 from repro.models.attention import _quant_kv
 from repro.serve.kvcache import gather_dequant_pages, gather_pages
 
@@ -99,6 +101,30 @@ def test_w8a8_parity(bits, gs, mkn):
     # the int8-activation path must still track the float-activation
     # dequant matmul (A8 quantization noise only)
     y_f = jnp.einsum("mk,kn->mn", x, dequantize(qt, jnp.float32))
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_f),
+                               rtol=5e-2, atol=5e-2 * float(jnp.max(jnp.abs(y_f))))
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("gs", GROUPS)
+@pytest.mark.parametrize("eckn", EXPERT_SHAPES)
+def test_expert_w8a8_parity(bits, gs, eckn):
+    """The expert-stacked W4A8/W8A8 kernel (per-expert int8 x int8 -> int32
+    MXU dots) matches the vmapped int32 reference and tracks the
+    float-activation expert dequant matmul to A8 quantization noise."""
+    e, c, k, n = eckn
+    kx, kw = _key(bits, gs, e, c, k, n, 7)
+    x = jax.random.normal(kx, (e, c, k), jnp.float32)
+    w = jax.random.normal(kw, (e, k, n), jnp.float32) * 0.1
+    qt = quantize_stacked(w, bits, gs, act_bits=8)
+    y_pal = ops.expert_w8a8_matmul(x, qt)              # pallas interpret
+    xq, xs = quantize_activation(x.reshape(e * c, k), 8)
+    y_ref = ref.expert_w8a8_matmul_ref(
+        xq.reshape(e, c, k), qt.qw, qt.scale, bits=bits, group_size=gs,
+        k=k) * xs.reshape(e, c, 1)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    y_f = jnp.einsum("eck,ekn->ecn", x, dequantize(qt, jnp.float32))
     np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_f),
                                rtol=5e-2, atol=5e-2 * float(jnp.max(jnp.abs(y_f))))
 
@@ -323,6 +349,65 @@ def test_paged_attention_verify_m1_matches_decode(kv_bits):
         k_scale_pool=pools["k_scale_pool"],
         v_scale_pool=pools["v_scale_pool"], window=window))[:, 0]
     np.testing.assert_allclose(ver, dec, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------- fused chunked-prefill read (M>1)
+
+# (S, M, W, ps, kvh, g, hd, fills, chunk, window): the prefill regime —
+# fill = ctx + chunk per slot, chunk <= M (left-padded bucket) and, unlike
+# verify, fills may be *smaller* than M (short prompt padded into the
+# bucket). Adversaries: chunk ending exactly on a page boundary, ragged
+# chunk lengths inside one bucket (incl. an idle slot), SWA skipping whole
+# pages behind the window, GQA group > 1
+PREFILL_CASES = [
+    (2, 8, 4, 8, 1, 2, 32, (8, 16), (8, 8), None),      # page boundary
+    (3, 8, 4, 8, 2, 1, 32, (5, 0, 11), (5, 0, 8), None),  # ragged chunk
+    (2, 8, 4, 8, 1, 2, 16, (9, 17), (8, 5), 6),        # sliding window
+    (2, 4, 4, 8, 2, 4, 32, (7, 12), (4, 2), None),     # GQA g=4
+]
+
+
+@pytest.mark.parametrize("kv_bits", [0, 8])
+@pytest.mark.parametrize("case", PREFILL_CASES)
+def test_paged_attention_prefill_parity(kv_bits, case):
+    """The fused prefill read (a slot's left-padded chunk against its own
+    earlier pages + shared prefix pages) matches the gather-the-context
+    oracle on every row the engine consumes."""
+    s, m, w, ps, kvh, g, hd, fills, chunk, window = case
+    q, pools, bt, kv_len = build_prefill_case(
+        sum(case[:7]) + kv_bits, s, m, w, ps, kvh, g, hd, fills, kv_bits)
+    out = np.asarray(ops.paged_attention_prefill(
+        q, pools["k_pool"], pools["v_pool"], bt, kv_len,
+        k_scale_pool=pools["k_scale_pool"],
+        v_scale_pool=pools["v_scale_pool"], window=window))
+    orc = np.asarray(prefill_oracle(q, pools, bt, kv_len, window, chunk),
+                     np.float32)
+    live = prefill_live_rows(kv_len, chunk, m)
+    np.testing.assert_allclose(out[live], orc[live], rtol=2e-2, atol=2e-2)
+    # idle slots read back as exact zeros (all rows dead)
+    slot_live = np.asarray(kv_len) > 0
+    assert np.all(out[~slot_live] == 0.0)
+
+
+@pytest.mark.parametrize("kv_bits", [0, 8])
+def test_paged_attention_prefill_interpret_matches_ref_exactly(kv_bits):
+    """Interpret-mode prefill kernel is bit-comparable with the jnp
+    reference page walk, like decode (M=1) and verify."""
+    s, m, w, ps, kvh, g, hd, fills, _chunk, window = PREFILL_CASES[2]
+    q, pools, bt, kv_len = build_prefill_case(53 + kv_bits, s, m, w, ps,
+                                              kvh, g, hd, fills, kv_bits)
+    qg = q.reshape(s, m, kvh, g, hd).transpose(0, 2, 1, 3, 4)
+    qg = qg.reshape(s, kvh, m * g, hd)
+    for win in (window, None):
+        ker = paged_attention_pallas(
+            qg, pools["k_pool"], pools["v_pool"], bt, kv_len,
+            pools["k_scale_pool"], pools["v_scale_pool"], window=win,
+            tile=ps, m_rows=m, interpret=True)
+        rr = ref.paged_attention_prefill_ref(
+            qg, pools["k_pool"], pools["v_pool"], bt, kv_len,
+            pools["k_scale_pool"], pools["v_scale_pool"], window=win,
+            tile=ps, m_rows=m)
+        np.testing.assert_array_equal(np.asarray(ker), np.asarray(rr))
 
 
 # ------------------------------------------------- packed storage density
